@@ -1,0 +1,54 @@
+"""Paper Fig. 4/8: messaging-layer throughput across message sizes.
+
+R-Pulsar's memory-mapped queue vs Kafka/Mosquitto.  Analogue: the
+device ring buffer (jit enqueue+dequeue, memory-resident) vs a naive
+per-message host queue crossing the host/device boundary every message
+(the "touches the slow tier per message" architecture the paper beats).
+"""
+import queue as pyqueue
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, time_stateful
+from repro.data import create, dequeue, enqueue
+
+BATCH = 256
+
+
+def bench():
+    for size_b in (64, 1024, 8192, 65536):
+        d = max(size_b // 4, 1)
+        msgs = jnp.ones((BATCH, d), jnp.float32)
+        rb = create(BATCH * 2, (d,))
+
+        def pulse(rb, msgs):
+            rb, _ = enqueue(rb, msgs)
+            rb, out, _ = dequeue(rb, BATCH)
+            return rb, out
+
+        jp = jax.jit(pulse, donate_argnums=(0,))
+        us = time_stateful(jp, rb, msgs)
+        rate = BATCH / (us / 1e6)
+        row(f"messaging/rpulsar_queue_{size_b}B", us / BATCH,
+            f"{rate:.0f}msg/s")
+
+        host_msg = np.ones(d, np.float32)
+
+        def naive():
+            q = pyqueue.Queue()
+            for _ in range(BATCH):
+                q.put(jax.device_put(host_msg))   # slow tier per message
+            while not q.empty():
+                np.asarray(q.get())
+            return 0
+
+        us = time_fn(naive, iters=3)
+        rate = BATCH / (us / 1e6)
+        row(f"messaging/naive_per_msg_{size_b}B", us / BATCH,
+            f"{rate:.0f}msg/s")
+
+
+if __name__ == "__main__":
+    bench()

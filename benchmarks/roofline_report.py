@@ -1,0 +1,79 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report reports/dryrun
+"""
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_e(x):
+    return f"{x:.2e}" if x is not None else "-"
+
+
+def load(d):
+    recs = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            recs.append(json.load(open(os.path.join(d, name))))
+    return recs
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
+    recs = load(d)
+    sp = [r for r in recs if r.get("mesh") == "16x16"]
+    mp = [r for r in recs if r.get("mesh") == "2x16x16"]
+
+    print("## Roofline table (single-pod 16x16, loop-free probe)\n")
+    print("| arch | shape | status | compute | memory | collective |"
+          " dominant | MODEL_FLOPS | HLO_FLOPs | useful ratio |"
+          " params B/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in sp:
+        if r["status"] == "SKIP":
+            print(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…)"
+                  f" | - | - | - | - | - | - | - | - |")
+            continue
+        if r["status"] != "OK":
+            print(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - | - |"
+                  f" - | - | - | - |")
+            continue
+        t = r["roofline"]
+        probe = r.get("probe", {})
+        print(f"| {r['arch']} | {r['shape']} | OK "
+              f"| {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+              f"| {fmt_s(t['collective_s'])} | {t['dominant']} "
+              f"| {fmt_e(r.get('model_flops'))} "
+              f"| {fmt_e(probe.get('hlo_flops', r.get('hlo_flops')))} "
+              f"| {r.get('useful_flops_ratio') and round(r['useful_flops_ratio'], 3)} "
+              f"| {r.get('param_bytes_per_device', 0)/2**30:.2f}G "
+              f"| {r.get('lower_compile_s', '-')} |")
+
+    print("\n## Multi-pod (2x16x16) compile proof\n")
+    print("| arch | shape | status | collective bytes (static) | compile s |")
+    print("|---|---|---|---|---|")
+    for r in mp:
+        cb = r.get("collective_bytes")
+        print(f"| {r['arch']} | {r['shape']} | {r['status']} "
+              f"| {fmt_e(cb) if cb else '-'} "
+              f"| {r.get('lower_compile_s', '-')} |")
+
+    n_ok = sum(1 for r in recs if r["status"] == "OK")
+    n_skip = sum(1 for r in recs if r["status"] == "SKIP")
+    n_fail = sum(1 for r in recs if r["status"] == "FAIL")
+    print(f"\nTotals: OK={n_ok} SKIP={n_skip} FAIL={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Figs. 9-10: routing overhead vs profile complexity and count.
+
+Measures the full content-routing path — profile -> SFC point ->
+Hilbert index (Pallas kernel) -> owner rank -> dispatch plan — as the
+profile dimensionality grows 2 -> 12 slots and the message count grows
+1 -> 100 (the paper's two sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import profiles as P
+from repro.core import routing, sfc
+from repro.core.overlay import Overlay
+
+
+def _profile_dim(dim, rng):
+    b = P.ProfileBuilder()
+    for i in range(min(dim, P.MAX_SLOTS)):
+        b.add_pair(f"attr{i}", f"v{rng.integers(0, 100)}")
+    return b.build()
+
+
+def route_batch(profs, table):
+    idx = sfc.profile_index(profs)
+    ranks = routing.rank_of_message(profs, table)
+    plan = routing.make_plan(ranks, 256, max(profs.shape[0] // 4, 8))
+    return idx, ranks, plan.position
+
+
+def bench():
+    rng = np.random.default_rng(0)
+    ov = Overlay.from_mesh_shape(16, 16, capacity=4)
+    table = jnp.asarray(ov.routing_table(granularity=8))
+    jroute = jax.jit(route_batch)
+
+    # sweep 1: profile complexity (paper: x6 complexity -> x1.2-2.5 time)
+    for dim in (2, 4, 6, 8, 12):
+        profs = jnp.asarray(np.stack(
+            [_profile_dim(dim, rng) for _ in range(100)]))
+        us = time_fn(jroute, profs, table)
+        row(f"routing/dims{dim}_n100", us, f"{us/100:.2f}us/msg")
+
+    # sweep 2: message count (paper: x100 msgs -> x2.5-25 time)
+    for n in (1, 10, 100, 1000):
+        profs = jnp.asarray(np.stack(
+            [_profile_dim(2, rng) for _ in range(n)]))
+        us = time_fn(jroute, profs, table)
+        row(f"routing/dims2_n{n}", us, f"{us/n:.2f}us/msg")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment format).
+
+  PYTHONPATH=src python -m benchmarks.run             # all
+  PYTHONPATH=src python -m benchmarks.run messaging   # one
+"""
+import sys
+
+from benchmarks import (messaging, pipeline_e2e, routing, scaling,
+                        store_query, tiering)
+
+SUITES = {
+    "tiering": tiering.bench,          # paper Table I
+    "messaging": messaging.bench,      # paper Fig. 4 / Fig. 8
+    "store_query": store_query.bench,  # paper Figs. 5-7
+    "routing": routing.bench,          # paper Figs. 9-10
+    "scaling": scaling.bench,          # paper Figs. 11-12
+    "pipeline_e2e": pipeline_e2e.bench,  # paper Fig. 14
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in which:
+        SUITES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Figs. 11-12: store/query scalability as RPs grow 4 -> 64.
+
+The paper's runtime grows ~4x for a 16x system-size growth (routing
+hops).  Here shards are overlay regions; the work per store/query is a
+dispatch over n_shards with fixed per-shard capacity — we sweep shard
+count and workload exactly like the paper's W1-W4."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import profiles as P
+from repro.core import routing, sfc
+from repro.core.overlay import Overlay
+
+WORKLOADS = {"w1": 1, "w2": 10, "w3": 50, "w4": 100}
+
+
+def bench():
+    rng = np.random.default_rng(0)
+    for n_rp in (4, 8, 16, 32, 64):
+        side = int(np.sqrt(n_rp))
+        ov = Overlay.from_mesh_shape(side, n_rp // side, capacity=2)
+        table = jnp.asarray(ov.routing_table(granularity=6))
+
+        def store_op(profs):
+            ranks = routing.rank_of_message(profs, table)
+            plan = routing.make_plan(ranks, n_rp, 32)
+            return routing.scatter_to_buckets(
+                jnp.ones((profs.shape[0], 8)), plan, n_rp, 32)
+
+        jstore = jax.jit(store_op)
+        for wname, w in WORKLOADS.items():
+            profs = jnp.asarray(np.stack(
+                [P.profile("k", t=f"v{rng.integers(0, 1000)}")
+                 for _ in range(w)]))
+            us = time_fn(jstore, profs)
+            row(f"scaling/store_{wname}_rp{n_rp}", us, f"{w/(us/1e6):.0f}op/s")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,69 @@
+"""Paper Figs. 5-7: store / exact-query / wildcard-query throughput.
+
+R-Pulsar's DHT vs SQLite/NitriteDB.  Analogue: the sharded in-memory
+associative store (fixed-shape masked scans — the 'fast tier' layout)
+with the Pallas armatch path, vs a host-python dict-of-lists baseline
+(per-record python matching = the row-store architecture).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import profiles as P
+from repro.core import store
+
+WORKLOADS = (1, 10, 50, 100)
+
+
+def _keys(n, rng):
+    return np.stack([P.profile("Drone", t=f"img{rng.integers(0, 1 << 30)}")
+                     for _ in range(n)])
+
+
+def bench():
+    rng = np.random.default_rng(0)
+    cap = 1024
+    base = store.init_store(cap, 8)
+    fill_keys = jnp.asarray(_keys(512, rng))
+    fill_vals = jnp.ones((512, 8))
+    base = store.store(base, fill_keys, fill_vals)
+    jstore = jax.jit(store.store)
+    jexact = jax.jit(store.query_exact)
+    jmatch = jax.jit(store.query_match, static_argnames=("max_results",))
+
+    for w in WORKLOADS:
+        keys = jnp.asarray(_keys(w, rng))
+        vals = jnp.ones((w, 8))
+        us = time_fn(jstore, base, keys, vals)
+        row(f"store/rpulsar_w{w}", us, f"{w/(us/1e6):.0f}items/s")
+
+        us = sum(time_fn(jexact, base, fill_keys[i]) for i in range(min(w, 8)))
+        us *= w / min(w, 8)
+        row(f"query_exact/rpulsar_w{w}", us, f"{w/(us/1e6):.0f}q/s")
+
+        interest = jnp.asarray(P.ProfileBuilder().add_single("Drone")
+                               .add_single("img*").build())
+        one = time_fn(lambda: jmatch(base, interest, max_results=16))
+        row(f"query_wild/rpulsar_w{w}", one * w, f"{w/(one*w/1e6):.0f}q/s")
+
+    # host-python baseline (row-store semantics)
+    pydb = [(f"img{i}", np.ones(8)) for i in range(512)]
+    for w in WORKLOADS:
+        def py_store():
+            for i in range(w):
+                pydb.append((f"img{i}", np.ones(8)))
+            del pydb[-w:]
+            return 0
+        us = time_fn(py_store)
+        row(f"store/pydict_w{w}", us, f"{w/(us/1e6):.0f}items/s")
+
+        def py_wild():
+            hits = [v for k, v in pydb if k.startswith("img4")]
+            return len(hits)
+        one = time_fn(py_wild)
+        row(f"query_wild/pydict_w{w}", one * w, f"{w/(one*w/1e6):.0f}q/s")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,45 @@
+"""Paper Table I: fast-tier vs slow-tier bandwidth.
+
+The paper measures RAM vs SD-card disk on a Raspberry Pi (sequential
+read 631 vs 19 MB/s).  The TPU-adaptation analogue: device-resident
+ring-buffer traffic (fast tier, stays in device memory, jit-fused) vs
+host<->device round-trips (slow tier) for the same payload.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, time_stateful
+from repro.data import create, dequeue, enqueue
+
+
+def bench():
+    for mb in (1, 8, 64):
+        n_items, d = 256, mb * 1024 * 1024 // 4 // 256
+        items = jnp.ones((n_items, d), jnp.float32)
+        rb = create(n_items * 2, (d,))
+
+        def device_cycle(rb, items):
+            rb, _ = enqueue(rb, items)
+            rb, out, _ = dequeue(rb, n_items)
+            return rb, out
+
+        jc = jax.jit(device_cycle, donate_argnums=(0,))
+        us = time_stateful(jc, rb, items)
+        bw = mb * 2 / (us / 1e6)   # write + read
+        row(f"tiering/device_ring_{mb}MB", us, f"{bw:.0f}MB/s")
+
+        host = np.ones((n_items, d), np.float32)
+
+        def host_cycle():
+            dev = jax.device_put(host)
+            back = np.asarray(dev)
+            return back.sum()
+
+        us = time_fn(host_cycle)
+        bw = mb * 2 / (us / 1e6)
+        row(f"tiering/host_roundtrip_{mb}MB", us, f"{bw:.0f}MB/s")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,70 @@
+"""Quickstart: the R-Pulsar programming model in one file.
+
+Mirrors the paper's API walk-through (§IV-D3): register a sensor
+(resource profile), declare a consumer interest, store a processing
+function, and let an IF-THEN rule trigger it on matching data.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import profiles as P
+from repro.core import routing, rules, serverless, sfc, store
+from repro.core.overlay import Overlay
+from repro.kernels.armatch import armatch
+
+# --- 1. Overlay bootstrap: 16 RPs on a 4x4 grid (paper Fig. 1) -----------
+ov = Overlay.from_mesh_shape(4, 4, capacity=2, replication=2)
+table = jnp.asarray(ov.routing_table(granularity=6))
+print(f"overlay: {sum(1 for _ in ov.leaves())} regions, "
+      f"routing table {table.shape[0]} cells")
+
+# --- 2. Producer: a drone with a LiDAR camera (paper Listing 1) ----------
+drone = P.ProfileBuilder().add_single("Drone").add_single("LiDAR") \
+    .add_num("lat", 40).add_num("long", -74).build()
+msg = P.ARMessage(profile=drone, action=P.A_NOTIFY_INTEREST,
+                  location=(40.0583, -74.4056))
+
+# --- 3. Consumer interest: "Drone" + "Li*" (paper Listing 2) -------------
+interest = P.ProfileBuilder().add_single("Drone").add_single("Li*").build()
+
+# content-based matching (associative selection), Pallas kernel:
+match = armatch(jnp.asarray(np.stack([drone])),
+                jnp.asarray(np.stack([interest])), interpret=True)
+print("drone profile matches interest:", bool(match[0, 0]))
+
+# --- 4. Routing: profile -> SFC point -> RP (paper Fig. 2) ---------------
+idx = sfc.profile_index(jnp.asarray(drone)[None, :])
+rank = routing.rank_of_message(jnp.asarray(drone)[None, :], table)
+print(f"profile -> hilbert index {int(idx[0]) & 0xffffffff:#010x} "
+      f"-> RP rank {int(rank[0])} (master {ov.master_of(int(rank[0]))})")
+
+# --- 5. Store + associative query (paper Listing 3 / Fig. 5-7) -----------
+st = store.init_store(capacity=64, value_dim=4)
+st = store.store(st, jnp.asarray(np.stack([drone] * 4)),
+                 jnp.arange(16, dtype=jnp.float32).reshape(4, 4))
+vals, hits, n = store.query_match(st, jnp.asarray(interest), max_results=4)
+print(f"wildcard query hits: {int(n)}")
+
+# --- 6. Rule-driven trigger (paper Listings 4-5) --------------------------
+registry = serverless.FunctionRegistry()
+post_proc = P.profile("post_processing_func")
+registry.store_function("post_processing_func", post_proc,
+                        lambda x: jnp.tanh(x))
+engine = rules.RuleEngine([
+    rules.threshold_rule("IF(RESULT >= 10)", 0, ">=", 10.0,
+                         rules.C_TRIGGER_TOPOLOGY, priority=1,
+                         payload="post_processing_func"),
+])
+features = jnp.asarray([[12.0], [3.0]])
+fired, consequence = engine(features)
+for i, c in enumerate(np.asarray(consequence)):
+    if c == rules.C_TRIGGER_TOPOLOGY:
+        hits = registry.start_function(
+            P.ProfileBuilder().add_single("post_proc*").build())
+        print(f"item {i}: rule fired -> triggered {hits[0][0].name}")
+    else:
+        print(f"item {i}: no action")
+print("registry stats:", registry.statistics())

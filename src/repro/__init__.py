@@ -1,0 +1,2 @@
+"""repro: R-Pulsar (edge data-driven pipelines) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, get_config,  # noqa: F401
+                                    shape_applicable, smoke_config)

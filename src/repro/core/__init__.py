@@ -1,0 +1,15 @@
+"""R-Pulsar core: the paper's contribution as composable JAX modules.
+
+Layers (paper §IV):
+  profiles   — AR profile/message encoding (TPU lane-aligned int32)
+  matching   — associative selection oracle (pure jnp)
+  sfc        — Hilbert space-filling-curve content routing
+  overlay    — location-aware quadtree overlay -> mesh routing table
+  routing    — SFC dispatch data plane (bucket + all_to_all), shared w/ MoE
+  store      — sharded DHT storage layer (memory-tier discipline)
+  rules      — IF-THEN data-driven rule engine
+  serverless — function profiles, store/start/stop, AOT cache
+  pipeline   — rule-gated edge/core data-driven pipelines
+"""
+from repro.core import (matching, overlay, pipeline, profiles, routing,  # noqa: F401
+                        rules, serverless, sfc, store)

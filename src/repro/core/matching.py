@@ -1,0 +1,61 @@
+"""Associative selection (paper §IV-D1): content-based profile matching.
+
+An *interest* profile p matches a *data* profile d iff every used slot of
+p is satisfied by some slot of d:
+  - attribute: exact or prefix (pre-computed byte masks) or wildcard;
+  - value: NONE (presence only), EXACT, PREFIX, ANY, RANGE (numeric).
+
+This module is the pure-jnp oracle; ``repro.kernels.armatch`` is the
+tiled Pallas twin used on the data path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import profiles as P
+
+
+def _slots(prof: jnp.ndarray) -> jnp.ndarray:
+    prof = jnp.asarray(prof, jnp.int32)
+    return prof.reshape(prof.shape[:-1] + (P.MAX_SLOTS, P.SLOT_WIDTH))
+
+
+def slot_match(ps: jnp.ndarray, ds: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise slot predicate.  ps, ds: [..., SLOT_WIDTH] broadcastable."""
+    ps = jnp.asarray(ps, jnp.int32)
+    ds = jnp.asarray(ds, jnp.int32)
+    used = (ps[..., P.L_USED] > 0) & (ds[..., P.L_USED] > 0)
+    # attribute: masked xor compare (mask==0 => wildcard attr)
+    am_a = (ps[..., P.L_ATTR_A] ^ ds[..., P.L_ATTR_A]) & ps[..., P.L_AMASK_A]
+    am_b = (ps[..., P.L_ATTR_B] ^ ds[..., P.L_ATTR_B]) & ps[..., P.L_AMASK_B]
+    attr_ok = (am_a == 0) & (am_b == 0)
+    pk = ps[..., P.L_VKIND]
+    dk = ds[..., P.L_VKIND]
+    v_eq_a = ps[..., P.L_V_A] == ds[..., P.L_V_A]
+    v_eq_b = ps[..., P.L_V_B] == ds[..., P.L_V_B]
+    pm_a = (ps[..., P.L_V_A] ^ ds[..., P.L_V_A]) & ps[..., P.L_VMASK_A]
+    pm_b = (ps[..., P.L_V_B] ^ ds[..., P.L_V_B]) & ps[..., P.L_VMASK_B]
+    in_range = (ps[..., P.L_V_A] <= ds[..., P.L_V_A]) & (ds[..., P.L_V_A] <= ps[..., P.L_V_B])
+    val_ok = jnp.where(
+        pk == P.VK_NONE, True,
+        jnp.where(pk == P.VK_EXACT, (dk == P.VK_EXACT) & v_eq_a & v_eq_b,
+        jnp.where(pk == P.VK_PREFIX, (dk == P.VK_EXACT) & (pm_a == 0) & (pm_b == 0),
+        jnp.where(pk == P.VK_ANY, dk != P.VK_NONE,
+        jnp.where(pk == P.VK_RANGE, (dk == P.VK_NUM) & in_range,
+                  False)))))
+    return used & attr_ok & val_ok
+
+
+def profile_match(interest: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """Single interest vs single data profile -> bool scalar (broadcasts)."""
+    ps = _slots(interest)[..., :, None, :]   # [..., Sp, 1, W]
+    ds = _slots(data)[..., None, :, :]       # [..., 1, Sd, W]
+    m = slot_match(ps, ds)                   # [..., Sp, Sd]
+    p_used = _slots(interest)[..., :, P.L_USED] > 0
+    sat = jnp.any(m, axis=-1)                # [..., Sp]
+    return jnp.all(sat | ~p_used, axis=-1) & jnp.any(p_used, axis=-1)
+
+
+def match_matrix(data: jnp.ndarray, interests: jnp.ndarray) -> jnp.ndarray:
+    """[M, PROFILE_WIDTH] data x [N, PROFILE_WIDTH] interests -> [M, N] bool."""
+    return profile_match(interests[None, :, :], data[:, None, :])

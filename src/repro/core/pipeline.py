@@ -1,0 +1,135 @@
+"""Edge/core data-driven pipelines (paper §II, §IV, Fig. 13-14).
+
+A pipeline is a sequence of *stages*, each bound to a placement tier
+("edge" or "core") and a processing function.  Between stages, the rule
+engine inspects per-item features and decides each item's fate — stay,
+escalate to the core stage, store, or drop.  This reproduces the
+paper's disaster-recovery workflow: edge pre-processing on every item,
+content-driven escalation of the interesting ones.
+
+Everything on the data path is fixed-shape and jit-compatible: items
+carry a live-mask instead of being filtered (the escalated subset is a
+masked batch, not a ragged one).  The placement tiers map to mesh
+slices: "edge" = a small sub-mesh (few chips, low-latency small model),
+"core" = the full pod (large model).  On CPU tests both tiers share the
+single device; placement is expressed through shardings so the dry-run
+proves the real thing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rules as R
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One processing stage.
+
+    fn: (params, batch [N, ...]) -> (outputs [N, ...], features [N, F])
+    The features feed the rule engine that gates the *next* stage.
+    """
+    name: str
+    fn: Callable
+    placement: str = "edge"            # "edge" | "core"
+    params: object = None
+
+
+class PipelineResult(NamedTuple):
+    outputs: jnp.ndarray               # [N, ...] final outputs (masked)
+    consequence: jnp.ndarray           # [N] last consequence code per item
+    escalated: jnp.ndarray             # [N] bool reached the core tier
+    stored: jnp.ndarray                # [N] bool marked store-at-edge
+    dropped: jnp.ndarray               # [N] bool dropped by quality rules
+    stage_features: tuple              # per-stage [N, F] features
+
+
+class DataDrivenPipeline:
+    """Rule-gated multi-stage pipeline (edge tier -> rules -> core tier).
+
+    ``core_capacity``: when set, core-placement stages run on a *compact*
+    batch of at most that many escalated items (gathered via the same
+    dispatch-plan machinery as SFC routing / MoE) — this is where the
+    paper's response-time gain comes from: the core tier is provisioned
+    for the escalated fraction, not the full stream.
+    """
+
+    def __init__(self, stages: Sequence[Stage], engine: R.RuleEngine,
+                 core_capacity: int | None = None):
+        if not stages:
+            raise ValueError("pipeline needs >= 1 stage")
+        self.stages = tuple(stages)
+        self.engine = engine
+        self.core_capacity = core_capacity
+
+    def __call__(self, batch: jnp.ndarray) -> PipelineResult:
+        return self.run(batch)
+
+    def _apply_stage(self, stage: Stage, outputs, live):
+        """Run a stage; core stages with a capacity run compacted."""
+        from repro.core import routing as RT
+        cap = self.core_capacity
+        if stage.placement != "core" or cap is None or cap >= live.shape[0]:
+            return stage.fn(stage.params, outputs)
+        dest = jnp.where(live, 0, 1).astype(jnp.int32)   # bucket 0 = core
+        plan = RT.make_plan(dest, 2, cap)
+        compact = RT.scatter_to_buckets(outputs, plan, 2, cap)[0]   # [C, ...]
+        c_out, c_feats = stage.fn(stage.params, compact)
+        pad_out = jnp.zeros((2, cap) + c_out.shape[1:], c_out.dtype) \
+            .at[0].set(c_out)
+        pad_feats = jnp.zeros((2, cap) + c_feats.shape[1:], c_feats.dtype) \
+            .at[0].set(c_feats)
+        full_out = RT.gather_from_buckets(pad_out, plan)
+        full_feats = RT.gather_from_buckets(pad_feats, plan)
+        # items beyond capacity stay un-escalated (overflow -> edge result)
+        return full_out, full_feats
+
+    def run(self, batch: jnp.ndarray) -> PipelineResult:
+        """Jit-compatible: every stage runs on the full fixed-shape batch;
+        rule consequences mask which items the next stage *commits*."""
+        n = batch.shape[0]
+        live = jnp.ones((n,), bool)
+        escalated = jnp.zeros((n,), bool)
+        stored = jnp.zeros((n,), bool)
+        dropped = jnp.zeros((n,), bool)
+        consequence = jnp.zeros((n,), jnp.int32)
+        outputs = batch
+        feats_all = []
+        for i, stage in enumerate(self.stages):
+            new_out, feats = self._apply_stage(stage, outputs, live)
+            feats_all.append(feats)
+            # commit outputs only for live items (masked update keeps shapes)
+            mask = live.reshape((n,) + (1,) * (new_out.ndim - 1))
+            outputs = jnp.where(mask, new_out, outputs)
+            _, cons = self.engine.evaluate(feats)
+            cons = jnp.where(live, cons, consequence)
+            consequence = cons
+            is_last = i == len(self.stages) - 1
+            stored |= live & (cons == R.C_STORE_EDGE)
+            dropped |= live & (cons == R.C_DROP)
+            if not is_last:
+                # items continue to the next (core) stage only when rules
+                # escalate them (paper: "if further processing is needed")
+                nxt = self.stages[i + 1]
+                goes_on = cons == R.C_SEND_CORE if nxt.placement == "core" \
+                    else (cons != R.C_DROP) & (cons != R.C_STORE_EDGE)
+                escalated |= live & goes_on & (nxt.placement == "core")
+                live = live & goes_on
+        return PipelineResult(outputs, consequence, escalated, stored,
+                              dropped, tuple(feats_all))
+
+
+def two_tier_pipeline(edge_fn: Callable, core_fn: Callable,
+                      engine: R.RuleEngine,
+                      edge_params=None, core_params=None,
+                      core_capacity: int | None = None) -> DataDrivenPipeline:
+    """The paper's canonical shape: edge pre-process -> rules -> core."""
+    return DataDrivenPipeline(
+        [Stage("edge_preprocess", edge_fn, "edge", edge_params),
+         Stage("core_postprocess", core_fn, "core", core_params)],
+        engine, core_capacity=core_capacity)

@@ -1,0 +1,121 @@
+"""Content-based routing data plane (paper §IV-B) as collective dispatch.
+
+The paper's post() walks a P2P overlay hop by hop.  On a pod every RP
+(chip) is one ICI hop away along mesh axes, so routing collapses to:
+
+    sfc index -> owner rank (table lookup) -> bucket -> one all_to_all
+
+This is exactly the MoE dispatch problem (tokens -> experts), so the
+same plan machinery drives both the AR data plane and the MoE layer
+(``repro.models.moe``): destinations play the role of experts, the
+per-destination ``capacity`` plays the role of expert capacity, and
+overflow is flagged, not silently dropped.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sfc
+
+
+class DispatchPlan(NamedTuple):
+    """Scatter plan for a batch of items to ``num_dest`` buckets."""
+    dest: jnp.ndarray        # [N] int32 destination bucket per item
+    position: jnp.ndarray    # [N] int32 slot within the bucket (< capacity)
+    keep: jnp.ndarray        # [N] bool  item fit under capacity
+    overflow: jnp.ndarray    # [num_dest] int32 items dropped per bucket
+    counts: jnp.ndarray      # [num_dest] int32 items kept per bucket
+
+
+def make_plan(dest: jnp.ndarray, num_dest: int, capacity: int) -> DispatchPlan:
+    """Deterministic first-come-first-kept bucketing (cumsum positions)."""
+    dest = jnp.asarray(dest, jnp.int32)
+    onehot = jax.nn.one_hot(dest, num_dest, dtype=jnp.int32)      # [N, D]
+    position = jnp.cumsum(onehot, axis=0) * onehot                # 1-based
+    pos = jnp.sum(position, axis=-1) - 1                          # [N] 0-based
+    keep = pos < capacity
+    total = jnp.sum(onehot, axis=0)                               # [D]
+    counts = jnp.minimum(total, capacity)
+    overflow = total - counts
+    return DispatchPlan(dest, pos, keep, overflow, counts)
+
+
+def scatter_to_buckets(items: jnp.ndarray, plan: DispatchPlan,
+                       num_dest: int, capacity: int) -> jnp.ndarray:
+    """[N, ...] items -> [num_dest, capacity, ...] buckets (zeros padding)."""
+    n = items.shape[0]
+    flat_idx = plan.dest * capacity + jnp.clip(plan.position, 0, capacity - 1)
+    buckets = jnp.zeros((num_dest * capacity,) + items.shape[1:], items.dtype)
+    src = jnp.where(plan.keep.reshape((n,) + (1,) * (items.ndim - 1)), items, 0)
+    buckets = buckets.at[flat_idx].add(src)   # add: disjoint slots for kept items
+    return buckets.reshape((num_dest, capacity) + items.shape[1:])
+
+
+def gather_from_buckets(buckets: jnp.ndarray, plan: DispatchPlan) -> jnp.ndarray:
+    """Inverse of :func:`scatter_to_buckets` (returns zeros for overflow)."""
+    num_dest, capacity = buckets.shape[:2]
+    flat = buckets.reshape((num_dest * capacity,) + buckets.shape[2:])
+    idx = plan.dest * capacity + jnp.clip(plan.position, 0, capacity - 1)
+    out = flat[idx]
+    keepb = plan.keep.reshape((-1,) + (1,) * (out.ndim - 1))
+    return jnp.where(keepb, out, 0)
+
+
+# ---------------------------------------------------------------------------
+# SPMD route step (runs under shard_map on the "data" axis)
+# ---------------------------------------------------------------------------
+
+def route_local(payload: jnp.ndarray, idx: jnp.ndarray, table: jnp.ndarray,
+                num_ranks: int, capacity: int) -> tuple[jnp.ndarray, DispatchPlan]:
+    """Bucket a local batch of messages by owner rank.
+
+    payload: [N, D] message payloads; idx: [N] SFC curve indices (int32
+    bit patterns, 2*order bits); table: [4^granularity] cell->rank.
+    Returns ([num_ranks, capacity, D] send buffer, plan).
+    """
+    u = jnp.asarray(idx).view(jnp.uint32)
+    # curve ids are 32-bit at DEFAULT_ORDER; table has 4^granularity cells
+    g2 = int(np.log2(table.shape[0]))          # = 2*granularity bits
+    cell = (u >> jnp.uint32(32 - g2)).astype(jnp.int32)
+    dest = table[cell]
+    plan = make_plan(dest, num_ranks, capacity)
+    send = scatter_to_buckets(payload, plan, num_ranks, capacity)
+    return send, plan
+
+
+def all_to_all_route(send: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Exchange [num_ranks, capacity, D] buffers: chunk i goes to rank i.
+
+    Under ``shard_map`` this lowers to a single all-to-all on the mesh
+    axis — the paper's multi-hop routing as one collective.
+    """
+    return jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+
+
+def route_and_deliver(payload: jnp.ndarray, idx: jnp.ndarray,
+                      table: jnp.ndarray, axis_name: str, num_ranks: int,
+                      capacity: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full data-plane step under shard_map: bucket -> all_to_all.
+
+    Returns ([num_ranks, capacity, D] received payloads — axis 0 is the
+    *source* rank after the exchange — and [num_ranks] receive counts).
+    """
+    send, plan = route_local(payload, idx, table, num_ranks, capacity)
+    recv = all_to_all_route(send, axis_name)
+    recv_counts = all_to_all_route(plan.counts.reshape(num_ranks, 1), axis_name)
+    return recv, recv_counts.reshape(num_ranks)
+
+
+def rank_of_message(profile_batch: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Convenience: encoded profiles [N, 128] -> owner ranks [N]."""
+    idx = sfc.profile_index(profile_batch)
+    u = idx.view(jnp.uint32)
+    g2 = int(np.log2(table.shape[0]))          # 2*granularity bits
+    cell = (u >> jnp.uint32(32 - g2)).astype(jnp.int32)
+    return table[cell]

@@ -1,0 +1,96 @@
+"""Data-driven IF-THEN rule engine (paper §IV-D2).
+
+Rules are jit-compatible predicates over per-item feature vectors.  The
+engine vectorizes the paper's conflict-set semantics: for every item,
+all rule conditions are evaluated, and the satisfied rule with the
+highest priority fires (paper: "out of this conflict set, one of those
+rules is triggered").  Consequences are integer action codes that the
+pipeline maps to reactions (trigger topology at edge/core, store,
+escalate, drop...).
+
+Two rule types from the paper:
+  - *quality* rules: time/size constraints on tuples (deadline trade-off),
+  - *content* rules: thresholds on computed features that trigger further
+    topologies on demand.
+Both reduce to predicates over the feature vector here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Built-in consequence codes (pipeline reactions)
+C_NONE, C_STORE_EDGE, C_SEND_CORE, C_TRIGGER_TOPOLOGY, C_DROP, C_NOTIFY = 0, 1, 2, 3, 4, 5
+
+CONSEQUENCE_NAMES = ["none", "store_edge", "send_core", "trigger_topology",
+                     "drop", "notify"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """IF ``condition(features) -> bool[...]`` THEN ``consequence``."""
+    name: str
+    condition: Callable[[jnp.ndarray], jnp.ndarray]
+    consequence: int
+    priority: int = 0
+    payload: str | None = None     # e.g. function-profile name to trigger
+
+
+class RuleEngine:
+    """Vectorized conflict-set resolution.
+
+    ``evaluate(features)`` takes [N, F] feature vectors and returns
+    ([N] fired-rule index or -1, [N] consequence code).  Pure function
+    of its inputs; safe under jit / shard_map.
+    """
+
+    def __init__(self, rules: Sequence[Rule]):
+        if not rules:
+            raise ValueError("need at least one rule")
+        self.rules = tuple(rules)
+        # Stable ordering: higher priority wins; ties -> earlier rule.
+        self._order = sorted(range(len(rules)),
+                             key=lambda i: (-rules[i].priority, i))
+        self._consequences = jnp.asarray(
+            [r.consequence for r in self.rules], jnp.int32)
+
+    def evaluate(self, features: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        n = features.shape[0]
+        fired = jnp.full((n,), -1, jnp.int32)
+        # iterate lowest-precedence first so highest-precedence overwrites
+        for i in reversed(self._order):
+            cond = self.rules[i].condition(features)
+            cond = jnp.asarray(cond).reshape(n).astype(bool)
+            fired = jnp.where(cond, jnp.int32(i), fired)
+        consequence = jnp.where(
+            fired >= 0, self._consequences[jnp.clip(fired, 0, None)], C_NONE)
+        return fired, consequence
+
+    def __call__(self, features: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return self.evaluate(features)
+
+
+def threshold_rule(name: str, feature_idx: int, op: str, value: float,
+                   consequence: int, priority: int = 0,
+                   payload: str | None = None) -> Rule:
+    """Paper-style rule: ``IF(RESULT >= 10) THEN trigger(topology)``."""
+    ops = {
+        ">=": lambda f: f[:, feature_idx] >= value,
+        ">":  lambda f: f[:, feature_idx] > value,
+        "<=": lambda f: f[:, feature_idx] <= value,
+        "<":  lambda f: f[:, feature_idx] < value,
+        "==": lambda f: f[:, feature_idx] == value,
+    }
+    if op not in ops:
+        raise ValueError(f"unknown op {op!r}")
+    return Rule(name, ops[op], consequence, priority, payload)
+
+
+def deadline_rule(name: str, latency_idx: int, budget: float,
+                  consequence: int = C_STORE_EDGE, priority: int = 10) -> Rule:
+    """Quality rule: items whose processing deadline budget is exceeded
+    stay at the edge (trade data quality for latency, paper §IV-D2)."""
+    return Rule(name, lambda f: f[:, latency_idx] > budget, consequence, priority)

@@ -1,0 +1,124 @@
+"""Serverless function layer (paper §IV-D1 actions, §III serverless model).
+
+``store_function`` registers a *function profile* -> executable mapping;
+``start_function`` resolves a profile against the registry (associative
+matching) and returns a compiled executable; ``stop_function`` retires
+it.  The platform's "functions" are step functions over the model zoo
+(any of the 10 assigned architectures, train or serve), plus arbitrary
+user-supplied jittable callables.
+
+The AOT cache is the TPU analogue of the paper's "store the function at
+the responsible RPs": compilation artifacts are keyed by (function,
+abstract input signature, mesh), so triggering the same topology twice
+never re-lowers — on-demand topologies (paper §IV-C2) with cold-start
+paid once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import matching, profiles as P
+
+
+@dataclasses.dataclass
+class FunctionEntry:
+    name: str
+    profile: np.ndarray                  # encoded function profile
+    fn: Callable                         # jittable callable
+    running: bool = False
+    meta: dict | None = None
+
+
+class FunctionRegistry:
+    """Associative store of function profiles (paper: distributed function
+    store enabling sharing/reuse).  Single-controller state; under SPMD
+    every host holds an identical copy (it is driven by the same program)."""
+
+    def __init__(self) -> None:
+        self._entries: list[FunctionEntry] = []
+        self._aot_cache: dict[tuple, Any] = {}
+
+    # -- actions ------------------------------------------------------------
+
+    def store_function(self, name: str, profile: np.ndarray, fn: Callable,
+                       meta: dict | None = None) -> None:
+        self._entries.append(FunctionEntry(name, np.asarray(profile), fn, False, meta))
+
+    def find(self, interest: np.ndarray) -> list[FunctionEntry]:
+        """All stored functions whose profile matches the interest."""
+        if not self._entries:
+            return []
+        table = jnp.asarray(np.stack([e.profile for e in self._entries]))
+        hits = np.asarray(matching.profile_match(
+            jnp.asarray(interest)[None, :], table))
+        return [e for e, h in zip(self._entries, hits) if h]
+
+    def start_function(self, interest: np.ndarray, *abstract_args,
+                       mesh=None, in_shardings=None, out_shardings=None,
+                       donate_argnums=()) -> list[tuple[FunctionEntry, Any]]:
+        """Match, AOT-compile (cached), mark running.  Returns
+        [(entry, compiled_or_fn)] for every match (paper: the function is
+        executed wherever its profile resolves)."""
+        out = []
+        for e in self.find(interest):
+            key = self._cache_key(e, abstract_args, mesh)
+            if key not in self._aot_cache:
+                jfn = jax.jit(e.fn, in_shardings=in_shardings,
+                              out_shardings=out_shardings,
+                              donate_argnums=donate_argnums)
+                if abstract_args:
+                    ctx = mesh if mesh is not None else _nullcontext()
+                    with ctx:
+                        self._aot_cache[key] = jfn.lower(*abstract_args).compile()
+                else:
+                    self._aot_cache[key] = jfn
+            e.running = True
+            out.append((e, self._aot_cache[key]))
+        return out
+
+    def stop_function(self, interest: np.ndarray) -> int:
+        n = 0
+        for e in self.find(interest):
+            if e.running:
+                e.running, n = False, n + 1
+        return n
+
+    def statistics(self) -> dict:
+        """Paper's ``statistics`` action: registry + cache status."""
+        return {
+            "stored": len(self._entries),
+            "running": sum(e.running for e in self._entries),
+            "aot_cached": len(self._aot_cache),
+            "names": [e.name for e in self._entries],
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    @staticmethod
+    def _sig(a) -> tuple:
+        if hasattr(a, "shape") and hasattr(a, "dtype"):
+            return ("arr", tuple(a.shape), str(a.dtype))
+        if isinstance(a, (list, tuple)):
+            return tuple(FunctionRegistry._sig(x) for x in a)
+        if isinstance(a, dict):
+            return tuple(sorted((k, FunctionRegistry._sig(v)) for k, v in a.items()))
+        return ("obj", str(a))
+
+    def _cache_key(self, e: FunctionEntry, args, mesh) -> tuple:
+        mesh_key = None
+        if mesh is not None:
+            mesh_key = (tuple(mesh.shape.keys()), tuple(mesh.shape.values()))
+        return (e.name, self._sig(args), mesh_key)
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

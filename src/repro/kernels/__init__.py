@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the platform's compute hot-spots.
+
+  hilbert      — batched Hilbert SFC index (content-routing hot path)
+  armatch      — Associative-Rendezvous profile matching (RP match engine)
+  decode_attn  — flash-decode GQA attention w/ KV cache (serving hot spot)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper), ref.py (pure-jnp oracle).  Kernels are validated in
+interpret mode on CPU; TPU is the target.
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.armatch.ops import armatch  # noqa: F401
+from repro.kernels.armatch.ref import armatch_ref  # noqa: F401

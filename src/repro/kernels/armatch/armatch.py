@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: Associative-Rendezvous profile matching.
+
+The paper's RP matching engine (RocksDB scans) becomes a dense tiled
+compare: a [M, 128] batch of data profiles against a [N, 128] table of
+interest profiles -> [M, N] 0/1 matches.  The tiling is matmul-shaped
+(like an MXU GEMM over a (M x N) output grid) but the inner op is a
+fixed 8x8 slot-pair sweep of VPU integer compares — the whole interest
+tile stays VMEM-resident across the M-sweep (BlockSpec pins it), which
+is the paper's "keep the hot set in the fast tier" rule applied to VMEM.
+
+Slot layout constants come from ``repro.core.profiles``; the jnp oracle
+is ``repro.core.matching`` (re-exported in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import profiles as P
+
+BLOCK_M = 128   # data profiles per tile
+BLOCK_N = 128   # interest profiles per tile
+WIDTH = P.PROFILE_WIDTH   # 128 int32 lanes per profile
+
+
+def _lane(ref, slot: int, off: int, transposed: bool):
+    """Static lane extraction: [B,1] (data) or [1,B] (interests^T)."""
+    j = slot * P.SLOT_WIDTH + off
+    if transposed:
+        return ref[j:j + 1, :]       # [1, BN]
+    return ref[:, j:j + 1]           # [BM, 1]
+
+
+def _kernel(d_ref, it_ref, o_ref):
+    """d_ref: [BM, 128] data profiles; it_ref: [128, BN] interests (transposed);
+    o_ref: [BM, BN] int32 0/1."""
+    acc_all = None   # AND over used interest slots
+    any_used = None  # interest must have >=1 used slot
+    for sp in range(P.MAX_SLOTS):          # interest slots
+        p_used = _lane(it_ref, sp, P.L_USED, True) > 0            # [1, BN]
+        p_attr_a = _lane(it_ref, sp, P.L_ATTR_A, True)
+        p_attr_b = _lane(it_ref, sp, P.L_ATTR_B, True)
+        p_amask_a = _lane(it_ref, sp, P.L_AMASK_A, True)
+        p_amask_b = _lane(it_ref, sp, P.L_AMASK_B, True)
+        p_vkind = _lane(it_ref, sp, P.L_VKIND, True)
+        p_v_a = _lane(it_ref, sp, P.L_V_A, True)
+        p_v_b = _lane(it_ref, sp, P.L_V_B, True)
+        p_vmask_a = _lane(it_ref, sp, P.L_VMASK_A, True)
+        p_vmask_b = _lane(it_ref, sp, P.L_VMASK_B, True)
+        sat = None   # OR over data slots: this interest slot satisfied
+        for sd in range(P.MAX_SLOTS):      # data slots
+            d_used = _lane(d_ref, sd, P.L_USED, False) > 0        # [BM, 1]
+            d_attr_a = _lane(d_ref, sd, P.L_ATTR_A, False)
+            d_attr_b = _lane(d_ref, sd, P.L_ATTR_B, False)
+            d_vkind = _lane(d_ref, sd, P.L_VKIND, False)
+            d_v_a = _lane(d_ref, sd, P.L_V_A, False)
+            d_v_b = _lane(d_ref, sd, P.L_V_B, False)
+            attr_ok = ((((p_attr_a ^ d_attr_a) & p_amask_a) == 0)
+                       & (((p_attr_b ^ d_attr_b) & p_amask_b) == 0))
+            v_eq = (p_v_a == d_v_a) & (p_v_b == d_v_b)
+            pfx = ((((p_v_a ^ d_v_a) & p_vmask_a) == 0)
+                   & (((p_v_b ^ d_v_b) & p_vmask_b) == 0))
+            in_rng = (p_v_a <= d_v_a) & (d_v_a <= p_v_b)
+            val_ok = jnp.where(
+                p_vkind == P.VK_NONE, True,
+                jnp.where(p_vkind == P.VK_EXACT, (d_vkind == P.VK_EXACT) & v_eq,
+                jnp.where(p_vkind == P.VK_PREFIX, (d_vkind == P.VK_EXACT) & pfx,
+                jnp.where(p_vkind == P.VK_ANY, d_vkind != P.VK_NONE,
+                jnp.where(p_vkind == P.VK_RANGE, (d_vkind == P.VK_NUM) & in_rng,
+                          False)))))
+            m = d_used & attr_ok & val_ok                          # [BM, BN]
+            sat = m if sat is None else (sat | m)
+        ok = sat | ~p_used          # unused interest slots don't constrain
+        acc_all = ok if acc_all is None else (acc_all & ok)
+        any_used = p_used if any_used is None else (any_used | p_used)
+    out = acc_all & any_used
+    o_ref[...] = out.astype(jnp.int32) * jnp.ones((1, 1), jnp.int32)
+
+
+def armatch_2d(data: jnp.ndarray, interests_t: jnp.ndarray,
+               *, interpret: bool = False,
+               block_m: int = BLOCK_M, block_n: int = BLOCK_N) -> jnp.ndarray:
+    """data: [M, 128] int32; interests_t: [128, N] int32 (transposed).
+    M % block_m == 0, N % block_n == 0.  Returns [M, N] int32 0/1."""
+    m, w = data.shape
+    w2, n = interests_t.shape
+    assert w == WIDTH and w2 == WIDTH and m % block_m == 0 and n % block_n == 0
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, WIDTH), lambda i, j: (i, 0)),
+            pl.BlockSpec((WIDTH, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(data, interests_t)

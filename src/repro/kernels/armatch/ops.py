@@ -1,0 +1,25 @@
+"""Jit'd wrapper: pad/transpose handling for the armatch kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import profiles as P
+from repro.kernels.armatch.armatch import BLOCK_M, BLOCK_N, armatch_2d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def armatch(data: jnp.ndarray, interests: jnp.ndarray,
+            *, interpret: bool = False) -> jnp.ndarray:
+    """[M, PROFILE_WIDTH] data x [N, PROFILE_WIDTH] interests -> [M, N] int32.
+
+    Padding rows are all-zero profiles: zero interests never match
+    (no used slot), zero data rows never satisfy any used slot."""
+    m, n = data.shape[0], interests.shape[0]
+    pm, pn = (-m) % BLOCK_M, (-n) % BLOCK_N
+    d = jnp.pad(jnp.asarray(data, jnp.int32), ((0, pm), (0, 0)))
+    it = jnp.pad(jnp.asarray(interests, jnp.int32), ((0, pn), (0, 0))).T
+    out = armatch_2d(d, it, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: the core associative-matching semantics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.matching import match_matrix
+
+
+def armatch_ref(data: jnp.ndarray, interests: jnp.ndarray) -> jnp.ndarray:
+    """[M,128] x [N,128] -> [M,N] int32 0/1."""
+    return match_matrix(data, interests).astype(jnp.int32)

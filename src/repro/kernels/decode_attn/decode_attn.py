@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: GQA decode attention with a KV cache (flash-decode).
+
+The platform's serving hot spot (paper §IV-C2 "stream processing
+engine"): one new token attends to a long KV cache.  Arithmetic
+intensity is O(1) FLOP/byte — decode attention is HBM-bandwidth-bound —
+so the kernel's whole job is to stream K/V through VMEM exactly once in
+large sequential blocks (the paper's Table-I discipline: sequential
+fast-tier reads) while keeping the online-softmax state resident.
+
+Layout: q [B, Hkv, G, D] (G = query heads per KV head), kv [B, Hkv, S, D].
+Grid (B, Hkv, S/BS); the S-axis is innermost so the VMEM scratch
+(m, l, acc) accumulates across KV blocks; output written on the last
+block.  Padded cache positions are masked with a bias row (0 / -inf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, b_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, blocks_s: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+    bias = b_ref[0].astype(jnp.float32)                  # [1, BS] (0 / -inf)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [G, BS]
+    s = s + bias                                          # mask padded rows
+
+    m_prev = m_ref[...]                                   # [G, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)            # [G, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                # [G, BS]
+    # fully-masked block: s == m_new == NEG_INF would give p = 1; kill it
+    p = p * (bias > 0.5 * NEG_INF).astype(p.dtype)
+    alpha = jnp.exp(m_prev - m_new)                       # [G, 1]
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(s_idx == blocks_s - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0, 1.0, l)   # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def decode_attn_4d(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   bias: jnp.ndarray, *, scale: float,
+                   block_s: int = DEFAULT_BLOCK_S,
+                   interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hkv, G, D]; k, v: [B, Hkv, S, D]; bias: [B, 1, S] (0/-inf).
+    S % block_s == 0.  Returns [B, Hkv, G, D] in q.dtype."""
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    assert k.shape == (b, hkv, s, d) and v.shape == k.shape
+    assert bias.shape == (b, 1, s) and s % block_s == 0
+    blocks_s = s // block_s
+    grid = (b, hkv, blocks_s)
+    kernel = functools.partial(_kernel, scale=scale, blocks_s=blocks_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, block_s), lambda bi, hi, si: (bi, 0, si)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, bias)

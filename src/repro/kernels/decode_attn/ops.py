@@ -1,0 +1,43 @@
+"""Jit'd wrapper for flash-decode: head grouping, padding, length bias."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.decode_attn import (DEFAULT_BLOCK_S, NEG_INF,
+                                                   decode_attn_4d)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_kv_heads", "block_s", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                     *, num_kv_heads: int, block_s: int = DEFAULT_BLOCK_S,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Decode-step attention.
+
+    q: [B, H, D] (one new token per sequence), H = num_kv_heads * G;
+    k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] valid cache rows.
+    Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    hkv = num_kv_heads
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+    kt = jnp.swapaxes(k_cache, 1, 2)        # [B, Hkv, S, D]
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    pad_s = (-s) % block_s
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    sp = s + pad_s
+    pos = jnp.arange(sp)[None, :]
+    bias = jnp.where(pos < lengths[:, None], 0.0, NEG_INF).astype(jnp.float32)
+    out = decode_attn_4d(qg, kt, vt, bias[:, None, :], scale=scale,
+                         block_s=block_s, interpret=interpret)
+    return out.reshape(b, h, d)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for GQA decode attention with KV cache + length mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    lengths: jnp.ndarray, *, scale: float) -> jnp.ndarray:
+    """q: [B, Hkv, G, D]; k, v: [B, Hkv, S, D]; lengths: [B] valid KV rows.
+    Returns [B, Hkv, G, D] in q.dtype; computed in f32."""
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qf, kf)
+    pos = jnp.arange(s)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+    return out.astype(q.dtype)

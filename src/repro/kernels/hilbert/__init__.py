@@ -1,0 +1,2 @@
+from repro.kernels.hilbert.ops import hilbert_xy2d  # noqa: F401
+from repro.kernels.hilbert.ref import hilbert_xy2d_ref  # noqa: F401

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: batched Hilbert SFC index (xy2d).
+
+The SFC transform sits on every post()/store()/route step (paper §IV-B),
+so it is the content-routing hot spot.  The computation is a fixed
+``order``-trip bit loop of pure int32/uint32 VPU ops — no gathers, no
+data-dependent control flow — so it vectorizes perfectly over (8, 128)
+int32 VREG tiles.
+
+GPU papers would do this with per-thread scalar loops; the TPU-native
+form is whole-tile select/shift/xor arithmetic (DESIGN.md §2: adapt the
+insight, not the CUDA shape).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile: 8 sublanes x 128 lanes of int32.
+BLOCK_ROWS = 8
+LANES = 128
+
+
+def _xy2d_tile(x: jnp.ndarray, y: jnp.ndarray, order: int) -> jnp.ndarray:
+    """Vectorized Hilbert xy->d on a tile; uint32 in/out."""
+    d = jnp.zeros_like(x)
+    for i in range(order - 1, -1, -1):
+        s = jnp.uint32(1 << i)
+        rx = ((x & s) > 0).astype(jnp.uint32)
+        ry = ((y & s) > 0).astype(jnp.uint32)
+        d = d + s * s * ((jnp.uint32(3) * rx) ^ ry)
+        reflect = (ry == 0) & (rx == 1)
+        x_r = jnp.where(reflect, s - 1 - x, x)
+        y_r = jnp.where(reflect, s - 1 - y, y)
+        swap = ry == 0
+        x, y = jnp.where(swap, y_r, x_r), jnp.where(swap, x_r, y_r)
+    return d
+
+
+def _kernel(x_ref, y_ref, o_ref, *, order: int):
+    x = x_ref[...].view(jnp.uint32)
+    y = y_ref[...].view(jnp.uint32)
+    o_ref[...] = _xy2d_tile(x, y, order).view(jnp.int32)
+
+
+def hilbert_xy2d_2d(x2d: jnp.ndarray, y2d: jnp.ndarray, order: int,
+                    *, interpret: bool = False,
+                    block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """Tiled pallas_call over [R, 128] int32 arrays (R % block_rows == 0)."""
+    rows, lanes = x2d.shape
+    assert lanes == LANES and rows % block_rows == 0, (rows, lanes)
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, order=order),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(x2d, y2d)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the Hilbert kernel: arbitrary-shape batches,
+padding/tiling handled here, kernel stays fixed-shape."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hilbert.hilbert import BLOCK_ROWS, LANES, hilbert_xy2d_2d
+
+
+@functools.partial(jax.jit, static_argnames=("order", "interpret"))
+def hilbert_xy2d(x: jnp.ndarray, y: jnp.ndarray, order: int = 16,
+                 *, interpret: bool = False) -> jnp.ndarray:
+    """Batched Hilbert index: any-shape int32 x/y -> same-shape int32 d."""
+    shape = x.shape
+    xf = jnp.ravel(jnp.asarray(x, jnp.int32))
+    yf = jnp.ravel(jnp.asarray(y, jnp.int32))
+    n = xf.shape[0]
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    xp = jnp.pad(xf, (0, pad)).reshape(-1, LANES)
+    yp = jnp.pad(yf, (0, pad)).reshape(-1, LANES)
+    d = hilbert_xy2d_2d(xp, yp, order, interpret=interpret)
+    return d.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Hilbert kernel: re-exports the core SFC math.
+
+The framework's ``repro.core.sfc.xy2d`` *is* the reference semantics;
+the kernel must agree with it bit-exactly on every shape/order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sfc import d2xy, xy2d  # noqa: F401
+
+
+def hilbert_xy2d_ref(x: jnp.ndarray, y: jnp.ndarray, order: int) -> jnp.ndarray:
+    return xy2d(x, y, order)

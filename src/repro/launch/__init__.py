@@ -1,0 +1,1 @@
+"""Launcher: meshes, shardings, abstract specs, dry-run, drivers."""

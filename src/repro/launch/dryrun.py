@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture x input shape x mesh): build abstract inputs,
+jit the step with production shardings, ``.lower().compile()``, and
+record memory/cost analysis + collective bytes for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi_34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch import hlo as hlo_mod
+from repro.launch import sharding as shd
+from repro.launch import specs as specs_mod
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro import optim
+
+
+def _opt_spec(cfg, pspec):
+    opt_cfg = optim.AdamWConfig(
+        moment_dtype=jnp.bfloat16 if cfg.param_dtype == jnp.bfloat16
+        else jnp.float32)
+    return jax.eval_shape(lambda p: optim.init(p, opt_cfg), pspec), opt_cfg
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D for MoE; decode: D = batch tokens."""
+    import repro.models.transformer as T
+    pspec = specs_mod.params_spec(cfg)
+    total = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(pspec))
+    active = total
+    if cfg.ffn == "moe":
+        expert = 0
+        for sp in jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map_with_path(
+                    lambda p, l: int(np.prod(l.shape))
+                    if "['moe']['w_" in jax.tree_util.keystr(p) else 0, pspec)):
+            expert += sp
+        active = total - expert + expert * cfg.moe.top_k / cfg.moe.num_experts
+    sh = SHAPES[shape_name]
+    tokens = sh["global_batch"] * (sh["seq_len"] if sh["kind"] != "decode" else 1)
+    mult = 6.0 if sh["kind"] == "train" else 2.0
+    return mult * active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, num_microbatches: int = 8, sequence_shard: bool = True,
+             probe: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not shape_applicable(cfg, shape_name):
+        rec["status"] = "SKIP"
+        rec["reason"] = "full-attention arch: long_500k needs sub-quadratic"
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    kind, args = specs_mod.input_specs(cfg, shape_name)
+    pspec = specs_mod.params_spec(cfg)
+    psh = shd.param_shardings(cfg, mesh, pspec)
+    try:
+        if kind == "train":
+            ospec, opt_cfg = _opt_spec(cfg, pspec)
+            osh = shd.opt_shardings(psh)
+            bsh = shd.batch_shardings(cfg, mesh, args[0])
+            step = steps_mod.build_train_step(
+                cfg, opt_cfg, num_microbatches=num_microbatches, mesh=mesh,
+                sequence_shard=sequence_shard)
+            jf = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+            with mesh:
+                lowered = jf.lower(pspec, ospec, args[0])
+        elif kind == "prefill":
+            bsh = shd.batch_shardings(cfg, mesh, args[0])
+            step = steps_mod.build_prefill_step(cfg, mesh=mesh,
+                                                sequence_shard=sequence_shard)
+            jf = jax.jit(step, in_shardings=(psh, bsh))
+            with mesh:
+                lowered = jf.lower(pspec, args[0])
+        else:  # decode
+            tokens, caches, lengths = args
+            csh = shd.cache_shardings(cfg, mesh, caches)
+            tsh = shd.batch_shardings(cfg, mesh, {"tokens": tokens})["tokens"]
+            lsh = shd.batch_shardings(cfg, mesh, {"lengths": lengths})["lengths"]
+            step = steps_mod.build_serve_step(cfg, mesh=mesh)
+            jf = jax.jit(step, in_shardings=(psh, tsh, csh, lsh),
+                         donate_argnums=(2,))
+            with mesh:
+                lowered = jf.lower(pspec, tokens, caches, lengths)
+        compiled = lowered.compile()
+        rec["lower_compile_s"] = round(time.time() - t0, 1)
+
+        ca = compiled.cost_analysis() or {}
+        # NOTE: per-device numbers of the partitioned module, and loops
+        # counted once — static lower bounds.  The roofline table uses the
+        # loop-free probe instead (launch/probe.py).
+        rec["hlo_flops_static_per_device"] = float(ca.get("flops", 0.0))
+        rec["hlo_flops"] = float(ca.get("flops", 0.0)) * n_chips
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0)) * n_chips
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis"] = {"error": str(e)[:200]}
+        # bytes per device from shardings (ground truth irrespective of backend)
+        def tree_device_bytes(tree, shardings):
+            tot = 0
+            for l, s in zip(jax.tree_util.tree_leaves(tree),
+                            jax.tree_util.tree_leaves(shardings)):
+                shard_shape = s.shard_shape(l.shape)
+                tot += int(np.prod(shard_shape)) * l.dtype.itemsize
+            return tot
+        rec["param_bytes_per_device"] = tree_device_bytes(pspec, psh)
+        if kind == "train":
+            rec["opt_bytes_per_device"] = tree_device_bytes(
+                ospec, jax.tree.map(lambda s: s, osh))
+        if kind == "decode":
+            rec["cache_bytes_per_device"] = tree_device_bytes(caches, csh)
+
+        coll = hlo_mod.collective_stats(compiled.as_text())
+        rec["collectives"] = {k: v for k, v in coll.items() if k != "total_bytes"}
+        rec["collective_bytes"] = coll["total_bytes"] * n_chips
+        terms = hlo_mod.roofline_terms(
+            rec["hlo_flops"], rec["hlo_bytes"], rec["collective_bytes"],
+            n_chips, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+        rec["roofline"] = terms
+        mf = model_flops(cfg, shape_name)
+        rec["model_flops"] = mf
+        rec["status"] = "OK"
+        if probe and not multi_pod:
+            from repro.launch.probe import probe_roofline
+            rec["probe"] = probe_roofline(
+                arch, shape_name, multi_pod=False,
+                sequence_shard=sequence_shard, verbose=verbose)
+            rec["roofline"] = rec["probe"]["roofline"]
+            rec["useful_flops_ratio"] = (mf / rec["probe"]["hlo_flops"]
+                                         if rec["probe"]["hlo_flops"] else None)
+        else:
+            rec["useful_flops_ratio"] = (mf / rec["hlo_flops"]
+                                         if rec["hlo_flops"] else None)
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    if verbose:
+        flat = {k: rec.get(k) for k in
+                ("arch", "shape", "mesh", "status", "lower_compile_s",
+                 "hlo_flops", "collective_bytes")}
+        print(json.dumps(flat), flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--no-sequence-shard", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="add loop-free roofline probe (single-pod only)")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp,
+                               num_microbatches=args.microbatches,
+                               sequence_shard=not args.no_sequence_shard,
+                               probe=args.probe)
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "FAIL":
+                    print(rec["error"])
+                    print(rec.get("traceback", "")[-1500:])
+
+
+if __name__ == "__main__":
+    main()

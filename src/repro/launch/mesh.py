@@ -1,0 +1,42 @@
+"""Production meshes (assignment §MULTI-POD DRY-RUN).
+
+v5e-class pod: 16x16 = 256 chips (data x model); multi-pod: 2 pods =
+512 chips with a leading "pod" axis (DP across pods, slow links ->
+gradient compression in repro.runtime.compression).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# Roofline hardware constants (TPU v5e-class, per assignment):
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes that carry the global batch."""
+    names = tuple(mesh.shape.keys())
+    return names[:-1]       # all but the trailing "model" axis
+
+
+def model_axis(mesh) -> str:
+    return tuple(mesh.shape.keys())[-1]
+
+
+def dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))

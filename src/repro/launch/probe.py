@@ -1,0 +1,153 @@
+"""Loop-free roofline probes (§ROOFLINE ANALYSIS).
+
+XLA's ``cost_analysis`` (and any static HLO scan) counts a while-loop
+body once, so the deploy lowering — scan over layers, microbatches,
+query chunks, recurrence steps — undercounts FLOPs/bytes/collectives by
+the trip counts.  The probe fixes this by lowering *loop-free* twins:
+
+  - layers:        per-kind decomposition — P0 (0 layers) + one-layer
+                   probes per layer kind; total = P0 + sum_k (Pk - P0) * n_k
+                   (exact: stacks are homogeneous per kind)
+  - microbatches:  K=1 (gradient accumulation adds are negligible)
+  - attention:     chunk_q = seq_len  (trip-1 scan unrolls)
+  - recurrences:   cfg.probe=True — FLOP-isomorphic, scan-free emulation
+
+Every while in the probe HLO has trip count <= 1, so static == dynamic
+and the three roofline terms are exact for the deploy semantics (up to
+the recurrence-emulation approximation, documented in the model files).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs.registry import SHAPES, get_config
+from repro.launch import hlo as hlo_mod
+from repro.launch import sharding as shd
+from repro.launch import specs as specs_mod
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+import jax.numpy as jnp
+
+
+def kind_counts(cfg) -> Counter:
+    c: Counter = Counter()
+    for kinds, repeat in cfg.stacks():
+        for k in kinds:
+            c[k] += repeat
+    return c
+
+
+def probe_cfg(cfg, kind: str | None, seq_len: int):
+    """Config for a loop-free probe lowering of 0 or 1 layers.
+
+    Attention chunks are statically unrolled in the model (no loop), so
+    chunk_q stays at its deploy value — the probe measures the deploy
+    schedule exactly."""
+    upd = dict()
+    if kind is None:
+        upd["n_layers"] = 0
+        upd["pattern"] = ("attn",)
+        upd["first_k_dense"] = 0
+    elif kind == "attn+dense":
+        upd.update(n_layers=1, pattern=("attn",), first_k_dense=1
+                   if cfg.ffn == "moe" else 0)
+    elif kind == "attn+moe":
+        upd.update(n_layers=1, pattern=("attn",), first_k_dense=0)
+    elif kind == "rwkv":
+        upd.update(n_layers=1, pattern=("rwkv",),
+                   rwkv=cfg.rwkv._replace(probe=True))
+    elif kind == "rec":
+        upd.update(n_layers=1, pattern=("rec",),
+                   rglru=cfg.rglru._replace(probe=True))
+    else:
+        raise ValueError(kind)
+    return dataclasses.replace(cfg, **upd)
+
+
+def _lower_cost(cfg, shape_name: str, mesh, *, sequence_shard: bool) -> dict:
+    """Lower+compile one probe; return flops/bytes/collective_bytes."""
+    kind, args = specs_mod.input_specs(cfg, shape_name)
+    pspec = specs_mod.params_spec(cfg)
+    psh = shd.param_shardings(cfg, mesh, pspec)
+    if kind == "train":
+        opt_cfg = optim.AdamWConfig(
+            moment_dtype=jnp.bfloat16 if cfg.param_dtype == jnp.bfloat16
+            else jnp.float32)
+        ospec = jax.eval_shape(lambda p: optim.init(p, opt_cfg), pspec)
+        osh = shd.opt_shardings(psh)
+        bsh = shd.batch_shardings(cfg, mesh, args[0])
+        step = steps_mod.build_train_step(
+            cfg, opt_cfg, num_microbatches=1, mesh=mesh,
+            sequence_shard=sequence_shard)
+        jf = jax.jit(step, in_shardings=(psh, osh, bsh), donate_argnums=(0, 1))
+        with mesh:
+            compiled = jf.lower(pspec, ospec, args[0]).compile()
+    elif kind == "prefill":
+        bsh = shd.batch_shardings(cfg, mesh, args[0])
+        step = steps_mod.build_prefill_step(cfg, mesh=mesh,
+                                            sequence_shard=sequence_shard)
+        jf = jax.jit(step, in_shardings=(psh, bsh))
+        with mesh:
+            compiled = jf.lower(pspec, args[0]).compile()
+    else:
+        tokens, caches, lengths = args
+        csh = shd.cache_shardings(cfg, mesh, caches)
+        tsh = shd.batch_shardings(cfg, mesh, {"tokens": tokens})["tokens"]
+        lsh = shd.batch_shardings(cfg, mesh, {"lengths": lengths})["lengths"]
+        step = steps_mod.build_serve_step(cfg, mesh=mesh)
+        jf = jax.jit(step, in_shardings=(psh, tsh, csh, lsh),
+                     donate_argnums=(2,))
+        with mesh:
+            compiled = jf.lower(pspec, tokens, caches, lengths).compile()
+    ca = compiled.cost_analysis() or {}
+    coll = hlo_mod.collective_stats(compiled.as_text())
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    # cost_analysis runs on the post-SPMD per-device module: scale to
+    # whole-program totals (verified: per-layer probe x chips == 6ND math).
+    return {"flops": float(ca.get("flops", 0.0)) * n_chips,
+            "bytes": float(ca.get("bytes accessed", 0.0)) * n_chips,
+            "collective_bytes": float(coll["total_bytes"]) * n_chips,
+            "collectives": {k: v for k, v in coll.items()
+                            if isinstance(v, dict) and v["count"]}}
+
+
+def probe_roofline(arch: str, shape_name: str, *, multi_pod: bool = False,
+                   sequence_shard: bool = True, verbose: bool = True) -> dict:
+    """Exact roofline terms for (arch x shape) on the production mesh."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    seq = SHAPES[shape_name]["seq_len"]
+    counts = kind_counts(cfg)
+
+    p0 = _lower_cost(probe_cfg(cfg, None, seq), shape_name, mesh,
+                     sequence_shard=sequence_shard)
+    if verbose:
+        print(f"  probe P0: flops={p0['flops']:.3e}", flush=True)
+    total = dict(p0)
+    per_kind = {}
+    for k, n in counts.items():
+        pk = _lower_cost(probe_cfg(cfg, k, seq), shape_name, mesh,
+                         sequence_shard=sequence_shard)
+        delta = {m: pk[m] - p0[m] for m in ("flops", "bytes", "collective_bytes")}
+        per_kind[k] = {"count": n, **delta}
+        for m in delta:
+            total[m] += delta[m] * n
+        if verbose:
+            print(f"  probe {k} x{n}: layer flops={delta['flops']:.3e}",
+                  flush=True)
+
+    terms = hlo_mod.roofline_terms(
+        total["flops"], total["bytes"], total["collective_bytes"], n_chips,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    return {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "hlo_flops": total["flops"], "hlo_bytes": total["bytes"],
+            "collective_bytes": total["collective_bytes"],
+            "per_kind": per_kind, "base": p0, "roofline": terms}

@@ -1,0 +1,69 @@
+"""Sharding-constraint context: lets model code place activation
+constraints (sequence parallelism etc.) without threading the mesh
+through every call.  Unset -> constraints are no-ops (CPU tests)."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = contextvars.ContextVar("repro_shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, dp_axes: tuple, *, sequence_axis: str | None,
+                        moe_axes: tuple | None = None):
+    """dp_axes: mesh axes carrying the batch (e.g. ("pod", "data")).
+    sequence_axis: axis to shard the residual-stream T dim over
+    (Megatron-style sequence parallelism) or None.
+    moe_axes: (expert_axes, ffn_axes) for expert-parallel activations
+    ("ep" / "ffn" template entries in :func:`constrain`)."""
+    tok = _CTX.set({"mesh": mesh, "dp": dp_axes, "seq": sequence_axis,
+                    "moe": moe_axes})
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def constrain_residual(x):
+    """Apply the context's residual-stream sharding to [B, T, D] acts."""
+    return constrain(x, ("dp", "seq", None))
+
+
+def constrain(x, spec_template: tuple):
+    """Generic activation constraint.  Template entries: "dp" -> the
+    context's batch axes, "seq" -> the sequence axis (may be None),
+    None/axis-name -> literal.  No-op outside a sharding context, and
+    per-entry divisibility is checked (non-divisible -> replicated)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    entries = []
+    for dim, e in enumerate(spec_template[: x.ndim]):
+        if e == "dp":
+            e = ctx["dp"]
+        elif e == "seq":
+            e = ctx["seq"]
+        elif e == "ep":
+            e = ctx["moe"][0] if ctx.get("moe") else None
+        elif e == "cap":
+            e = ctx["moe"][1] if ctx.get("moe") else None
+        if e is None:
+            entries.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        entries.append(e if x.shape[dim] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def dp_axes() -> tuple | None:
+    ctx = _CTX.get()
+    return None if ctx is None else ctx["dp"]

@@ -1,0 +1,190 @@
+"""Partition rules: param/batch/cache pytrees -> NamedShardings.
+
+Rules are (regex over the tree path, PartitionSpec) — first match wins.
+Stacked (scan-driven) leaves live under ['stacks'] and get a leading
+None dim prepended automatically.  MoE expert placement is decided per
+config: expert-parallel over "model" when E divides it, else TP inside
+the expert FFN; the 1T-class config additionally shards experts over
+"data" (ZeRO-style) to fit HBM.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, model_axis
+from repro.models.transformer import ArchConfig
+
+
+def moe_axes(cfg: ArchConfig, mesh) -> tuple:
+    """Expert-parallel layout: (expert_dim_axes, ffn_dim_axes).
+
+    - E divides model and per-chip share fits: EP over "model".
+    - 1T-class (Kimi): E over "data" (ZeRO-style) x d_ff over "model" —
+      the only layout whose per-chip share fits 16G HBM.
+    - few big experts (Mixtral): TP inside the expert FFN only.
+    Used for both the parameter rules and the activation constraints
+    (shardctx "ep"/"ffn" entries) so compute is sharded, not replicated.
+    """
+    mdl = model_axis(mesh)
+    dp = dp_axes(mesh)
+    tp = mesh.shape[mdl]
+    e = cfg.moe.num_experts
+    dp_last = dp[-1] if dp else None
+    dsize = mesh.shape[dp_last] if dp_last else 1
+    if e % tp == 0 and e >= tp:
+        if (dp_last and e % dsize == 0 and cfg.moe.d_ff % tp == 0
+                and cfg.name.startswith("kimi")):
+            return (dp_last, mdl)
+        return (mdl, None)
+    return (None, mdl)
+
+
+def moe_compute_axes(cfg: ArchConfig, mesh) -> tuple:
+    """Expert-parallel COMPUTE layout: (expert_axes, capacity_axes) for
+    the grouped bucket tensors [G, E, C, ...] (G is always over the
+    batch axes).  E over "model" when divisible (even if the *storage*
+    layout differs — XLA inserts FSDP-style per-layer weight gathers),
+    else the per-group capacity dim goes over "model" (few big experts,
+    Mixtral).  Either way no chip replicates expert GEMMs."""
+    mdl = model_axis(mesh)
+    if cfg.moe.num_experts % mesh.shape[mdl] == 0:
+        return (mdl, None)
+    return (None, mdl)
+
+
+def _param_rules(cfg: ArchConfig, mesh) -> list[tuple[str, P]]:
+    mdl = model_axis(mesh)
+    dp = dp_axes(mesh)
+    tp = mesh.shape[mdl]
+    rules: list[tuple[str, P]] = [
+        (r"\['embed'\]$", P(mdl, None)),
+        (r"\['unembed'\]$", P(None, mdl)),
+        (r"norm.*\['scale'\]$", P(None)),
+        (r"norm.*\['bias'\]$", P(None)),
+        # attention
+        (r"\['attn'\]\['w[qkv]'\]$", P(None, mdl)),
+        (r"\['attn'\]\['wo'\]$", P(mdl, None)),
+        (r"\['attn'\]\['b[qkv]'\]$", P(mdl)),
+        # dense ffn (+ moe shared expert)
+        (r"\['(ffn|shared)'\]\['w_(in|gate)'\]$", P(None, mdl)),
+        (r"\['(ffn|shared)'\]\['w_out'\]$", P(mdl, None)),
+        # rwkv
+        (r"\['tmix'\]\['w[rkvg]'\]$", P(None, mdl)),
+        (r"\['tmix'\]\['wo'\]$", P(mdl, None)),
+        (r"\['tmix'\]\['w_lora_a'\]$", P(None, None)),
+        (r"\['tmix'\]\['w_lora_b'\]$", P(None, mdl)),
+        (r"\['tmix'\]\['(bonus_u|ln_scale)'\]$", P(mdl, None)),
+        (r"\['tmix'\]\['w_base'\]$", P(mdl)),
+        (r"\['tmix'\]\['mu_.'\]$", P(None)),
+        (r"\['cmix'\]\['w[kr]'\]$", P(None, mdl)),
+        (r"\['cmix'\]\['wv'\]$", P(mdl, None)),
+        (r"\['cmix'\]\['mu_.'\]$", P(None)),
+        # rg-lru
+        (r"\['rec'\]\['w_(gate|x)'\]$", P(None, mdl)),
+        (r"\['rec'\]\['conv_w'\]$", P(None, mdl)),
+        (r"\['rec'\]\['conv_b'\]$", P(mdl)),
+        (r"\['rec'\]\['rg_w[ax]'\]$", P(None, mdl)),
+        (r"\['rec'\]\['rg_lambda'\]$", P(mdl)),
+        (r"\['rec'\]\['w_out'\]$", P(mdl, None)),
+        # moe router
+        (r"\['moe'\]\['router'\]$", P(None, None)),
+    ]
+    if cfg.moe is not None:
+        e_ax, f_ax = moe_axes(cfg, mesh)
+        espec_in = P(e_ax, None, f_ax)
+        espec_out = P(e_ax, f_ax, None)
+        rules += [
+            (r"\['moe'\]\['w_(in|gate)'\]$", espec_in),
+            (r"\['moe'\]\['w_out'\]$", espec_out),
+        ]
+    rules.append((r".*", P()))     # default: replicate
+    return rules
+
+
+def _match(path: str, rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return P()
+
+
+def _fit(mesh, spec: P, shape: tuple) -> P:
+    """Null out spec entries whose mesh-axes product doesn't divide the
+    dim (explicit arg shardings must divide evenly — no GSPMD padding)."""
+    out = []
+    for i, e in enumerate(tuple(spec)[: len(shape)]):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(e if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def param_shardings(cfg: ArchConfig, mesh, params_shape) -> Any:
+    """params_shape: pytree of ShapeDtypeStructs (jax.eval_shape output)."""
+    rules = _param_rules(cfg, mesh)
+
+    def assign(path_entries, leaf):
+        path = jax.tree_util.keystr(path_entries)
+        spec = _match(path, rules)
+        if "['stacks']" in path:
+            spec = P(*((None,) + tuple(spec)))    # leading scan/repeat dim
+        spec = _fit(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def opt_shardings(param_sh, step_like=None) -> Any:
+    """AdamW state: moments shard like params, step replicated."""
+    mesh = jax.tree_util.tree_leaves(param_sh)[0].mesh
+    from repro.optim.adamw import AdamWState
+    return AdamWState(m=param_sh, v=param_sh,
+                      step=NamedSharding(mesh, P()))
+
+
+def batch_shardings(cfg: ArchConfig, mesh, batch_shape: dict) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        if k == "mrope_positions":
+            spec = P(None, dp, None)
+        else:
+            spec = P(*((dp,) + (None,) * (v.ndim - 1)))
+        out[k] = NamedSharding(mesh, _fit(mesh, spec, v.shape))
+    return out
+
+
+def cache_shardings(cfg: ArchConfig, mesh, caches_shape) -> Any:
+    """Decode caches: batch over dp; heads/width over model."""
+    dp = dp_axes(mesh)
+    mdl = model_axis(mesh)
+
+    def assign(path_entries, leaf):
+        path = jax.tree_util.keystr(path_entries)
+        if "['attn']" in path:                 # [R, B, S, Hkv, dh]
+            # S over model (split-KV decode): Hkv is rarely divisible by tp
+            spec = P(None, dp, mdl, None, None)
+        elif "['wkv']" in path:                # [R, B, H, dk, dv]
+            spec = P(None, dp, mdl, None, None)
+        elif "['conv']" in path:               # [R, B, W-1, Dr]
+            spec = P(None, dp, None, mdl)
+        elif "['h']" in path:                  # [R, B, Dr]
+            spec = P(None, dp, mdl)
+        elif "shift" in path or "['cmix']" in path:   # [R, B, D]
+            spec = P(None, dp, None)
+        else:
+            spec = P()
+        spec = _fit(mesh, P(*tuple(spec)[: leaf.ndim]), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, caches_shape)

@@ -1,0 +1,59 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch x shape) cell.
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+allocation.  Modality frontends are stubs per the assignment: the VLM
+cell provides precomputed patch embeddings + merge mask; the audio cell
+provides EnCodec token ids (the codec itself is the stub).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES
+from repro.models import transformer as T
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_spec(cfg, batch: int, seq: int) -> dict:
+    spec = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+    if cfg.vlm:
+        spec["vision_embeds"] = _sds((batch, seq, cfg.d_model), cfg.compute_dtype)
+        spec["vision_mask"] = _sds((batch, seq), jnp.bool_)
+        spec["mrope_positions"] = _sds((3, batch, seq), jnp.int32)
+    return spec
+
+
+def prefill_batch_spec(cfg, batch: int, seq: int) -> dict:
+    spec = train_batch_spec(cfg, batch, seq)
+    del spec["labels"]
+    return spec
+
+
+def decode_specs(cfg, batch: int, seq: int):
+    """(tokens, caches, lengths) abstract trees for serve_step."""
+    tokens = _sds((batch, 1), jnp.int32)
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, batch, seq))
+    lengths = _sds((batch,), jnp.int32)
+    return tokens, caches, lengths
+
+
+def input_specs(cfg, shape_name: str):
+    """Returns (kind, args tuple of abstract values for the step fn)."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    if sh["kind"] == "train":
+        return "train", (train_batch_spec(cfg, b, s),)
+    if sh["kind"] == "prefill":
+        return "prefill", (prefill_batch_spec(cfg, b, s),)
+    return "decode", decode_specs(cfg, b, s)
+
+
+def params_spec(cfg):
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))

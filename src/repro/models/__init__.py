@@ -1,0 +1,4 @@
+"""Model zoo: one composable decoder stack, 10 architecture configs."""
+from repro.models.transformer import (ArchConfig, decode_step, forward,  # noqa: F401
+                                      init_caches, init_params, loss_fn,
+                                      prefill)

@@ -1,0 +1,189 @@
+"""GQA attention: chunked-causal train/prefill path + cached decode path.
+
+Train/prefill uses a query-chunked, mask-based online computation (pure
+jnp scan, flash-style memory: the [chunk_q, S] score tile is the only
+materialized block, and `jax.checkpoint` on the chunk body keeps the
+backward pass from saving every tile).  Decode uses either the jnp
+reference or the Pallas flash-decode kernel (``use_kernel``).
+
+Supports: GQA/MQA/MHA, optional QKV bias (Qwen2), sliding-window
+(Mixtral SWA / RecurrentGemma local attention), RoPE / M-RoPE.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import positional as pos_mod
+
+NEG_INF = -1e30
+
+
+class AttnConfig(NamedTuple):
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    window: int | None = None          # sliding-window size (None = full)
+    rope: str = "rope"                 # "rope" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = (16, 24, 24)
+    chunk_q: int = 512
+
+
+def init_attn(key, d_model: int, cfg: AttnConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": L.dense_init(ks[0], d_model, h * dh, dtype),
+        "wk": L.dense_init(ks[1], d_model, hkv * dh, dtype),
+        "wv": L.dense_init(ks[2], d_model, hkv * dh, dtype),
+        "wo": L.dense_init(ks[3], h * dh, d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: AttnConfig, positions):
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, h, dh)
+    k = k.reshape(b, t, hkv, dh)
+    v = v.reshape(b, t, hkv, dh)
+    if cfg.rope == "rope":
+        pos2 = positions if positions.ndim == 2 else positions[0]
+        q = pos_mod.apply_rope(q, pos2, cfg.rope_theta)
+        k = pos_mod.apply_rope(k, pos2, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        assert positions.ndim == 3, "mrope needs [3, B, T] positions"
+        q = pos_mod.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = pos_mod.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def causal_attention(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                     cfg: AttnConfig) -> tuple[jnp.ndarray, dict]:
+    """Training / prefill forward.  x: [B, T, D_model]; positions [B, T]
+    (or [3, B, T] for mrope).  Returns (out [B, T, D_model], kv cache)."""
+    b, t, d_model = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // hkv
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    scale = 1.0 / (dh ** 0.5)
+
+    cq = min(cfg.chunk_q, t)
+    while t % cq:          # fall back to a divisor (odd test lengths)
+        cq -= 1
+
+    from repro.launch import shardctx
+    # sequence-parallel layout: queries sharded along T; K/V replicated
+    # (all-gather-attention — keeps softmax local, no score collectives)
+    q = shardctx.constrain(q, ("dp", "seq", None, None))
+    k = shardctx.constrain(k, ("dp", None, None, None))
+    v = shardctx.constrain(v, ("dp", None, None, None))
+
+    kg = k.reshape(b, t, hkv, 1, dh)
+    vg = v.reshape(b, t, hkv, 1, dh)
+
+    def chunk_fn(qc, kc, vc, qp, kp):
+        # qc: [B, cq, H, dh]; kc/vc: [B, L, hkv, 1, dh] causal KV slice
+        qc = qc.reshape(b, cq, hkv, g, dh)
+        s = jnp.einsum("bqhgd,bkhud->bhgqk", qc.astype(jnp.float32) * scale,
+                       kc.astype(jnp.float32))            # [B,hkv,g,cq,L]
+        mask = qp[:, None] >= kp[None, :]                 # causal
+        if cfg.window is not None:
+            mask &= (qp[:, None] - kp[None, :]) < cfg.window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhud->bqhgd", w, vc.astype(jnp.float32))
+        return o.reshape(b, cq, h * dh).astype(x.dtype)
+
+    chunk_fn = jax.checkpoint(chunk_fn, prevent_cse=False)
+
+    # statically unrolled query chunks with *causal KV truncation*: chunk i
+    # only reads keys [lo_i, hi_i) — half the score FLOPs of a masked full
+    # sweep, window-bounded for SWA/local attention.  Static slices keep
+    # the HLO loop-free (exact cost analysis, no scan-carry residuals).
+    outs = []
+    for i in range(t // cq):
+        hi = (i + 1) * cq
+        lo = 0 if cfg.window is None else max(0, hi - cfg.window - cq)
+        qc = jax.lax.slice_in_dim(q, i * cq, hi, axis=1)
+        kc = jax.lax.slice_in_dim(kg, lo, hi, axis=1)
+        vc = jax.lax.slice_in_dim(vg, lo, hi, axis=1)
+        qp = jnp.arange(i * cq, hi)
+        kp = jnp.arange(lo, hi)
+        outs.append(chunk_fn(qc, kc, vc, qp, kp))
+    out = jnp.concatenate(outs, axis=1)
+    out = shardctx.constrain(out, ("dp", "seq", None))
+    cache = {"k": k, "v": v}
+    return out @ p["wo"], cache
+
+
+def decode_attention_step(p: dict, x: jnp.ndarray, cache: dict,
+                          lengths: jnp.ndarray, cfg: AttnConfig,
+                          *, use_kernel: bool = False,
+                          interpret: bool = True) -> tuple[jnp.ndarray, dict]:
+    """One decode step.  x: [B, 1, D_model]; cache {k, v}: [B, S, Hkv, dh]
+    ring buffers; lengths: [B] tokens generated so far (cache fill).
+    Returns (out [B, 1, D_model], updated cache)."""
+    b, one, d_model = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s_cache = cache["k"].shape[1]
+    positions = lengths[None, :, None] * jnp.ones((3, 1, 1), jnp.int32) \
+        if cfg.rope == "mrope" else lengths[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    # ring-buffer write (sliding window wraps; full attn: slot == length)
+    slot = lengths % s_cache
+    k_cache = jax.vmap(lambda c, kk, sl: jax.lax.dynamic_update_slice(
+        c, kk, (sl, 0, 0)))(cache["k"], k, slot)
+    v_cache = jax.vmap(lambda c, vv, sl: jax.lax.dynamic_update_slice(
+        c, vv, (sl, 0, 0)))(cache["v"], v, slot)
+    valid = jnp.minimum(lengths + 1, s_cache)
+
+    if use_kernel:
+        from repro.kernels.decode_attn import decode_attention as kernel_fn
+        out = kernel_fn(q.reshape(b, h, dh), k_cache, v_cache, valid,
+                        num_kv_heads=hkv, interpret=interpret)
+    else:
+        # split-KV decode attention: the cache stays sharded along S
+        # ("seq" = model axis under serve); the softmax max/sum and the
+        # PV contraction reduce over the sharded dim, so XLA emits tiny
+        # stat psums instead of all-gathering the whole cache per layer.
+        from repro.launch import shardctx
+        g = h // hkv
+        qg = q.reshape(b, hkv, g, dh).astype(jnp.float32) / (dh ** 0.5)
+        kt = shardctx.constrain(jnp.swapaxes(k_cache, 1, 2),
+                                ("dp", None, "seq", None))
+        vt = shardctx.constrain(jnp.swapaxes(v_cache, 1, 2),
+                                ("dp", None, "seq", None))
+        scores = jnp.einsum("bhgd,bhsd->bhgs", qg, kt.astype(jnp.float32))
+        scores = shardctx.constrain(scores, ("dp", None, None, "seq"))
+        pos = jnp.arange(s_cache)[None, None, None, :]
+        mask = pos < valid[:, None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        w = jnp.where(mask, w, 0.0)
+        out = jnp.einsum("bhgs,bhsd->bhgd", w, vt.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(b, h, dh)
+    out = out.reshape(b, 1, h * dh) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def init_cache(cfg: AttnConfig, batch: int, seq_len: int, dtype) -> dict:
+    s = seq_len if cfg.window is None else min(seq_len, cfg.window)
+    shape = (batch, s, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

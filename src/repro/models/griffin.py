@@ -1,0 +1,97 @@
+"""RecurrentGemma / Griffin RG-LRU recurrent block.
+
+Block: x -> (linear -> GeLU gate) || (linear -> causal conv1d(w=4) ->
+RG-LRU) -> elementwise product -> linear out.  The RG-LRU recurrence:
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = a^(c * r_t)        (a = sigmoid(lambda), c = 8, per-channel)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+State is a [B, D_rnn] vector + [B, W-1, D_rnn] conv tail -> O(1) decode
+(why this arch RUNS the 500k cell).  Train uses the chunked scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class RGLRUConfig(NamedTuple):
+    d_rnn: int                # recurrence width (= d_model in RecurrentGemma)
+    conv_width: int = 4
+    c: float = 8.0
+    chunk: int = 256
+    # probe mode: loop-free FLOP-isomorphic recurrence (launch/probe.py).
+    probe: bool = False
+
+
+def init_rglru_block(key, d_model: int, cfg: RGLRUConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    dr = cfg.d_rnn
+    return {
+        "w_gate": L.dense_init(ks[0], d_model, dr, dtype),
+        "w_x": L.dense_init(ks[1], d_model, dr, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32)
+                   / (cfg.conv_width ** 0.5)).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "rg_wa": L.dense_init(ks[3], dr, dr, dtype),
+        "rg_wx": L.dense_init(ks[4], dr, dr, dtype),
+        "rg_lambda": jnp.full((dr,), 2.2, dtype),   # sigmoid() ~ 0.9
+        "w_out": L.dense_init(ks[5], dr, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: [B,T,D]; w: [W,D]; tail: [B,W-1,D]."""
+    width = w.shape[0]
+    xp = jnp.concatenate([tail, x], axis=1)                  # [B, T+W-1, D]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width)) + b
+    return out.astype(x.dtype), xp[:, -(width - 1):, :]
+
+
+def rglru_block_apply(p: dict, x: jnp.ndarray, cfg: RGLRUConfig,
+                      state: dict | None = None
+                      ) -> tuple[jnp.ndarray, dict]:
+    """x: [B, T, D_model].  state: {"h": [B,Dr] f32, "conv": [B,W-1,Dr]}."""
+    b, t, _ = x.shape
+    dr = cfg.d_rnn
+    if state is None:
+        state = {"h": jnp.zeros((b, dr), jnp.float32),
+                 "conv": jnp.zeros((b, cfg.conv_width - 1, dr), x.dtype)}
+    gate = jax.nn.gelu(x @ p["w_gate"])                      # [B,T,Dr]
+    u = x @ p["w_x"]
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+
+    r = jax.nn.sigmoid((u @ p["rg_wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["rg_wx"]).astype(jnp.float32))
+    log_a = cfg.c * r * jax.nn.log_sigmoid(p["rg_lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)                                       # [B,T,Dr] in (0,1)
+    gated_in = i * u.astype(jnp.float32)
+    drive = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_in
+
+    aT = jnp.moveaxis(a, 1, 0)
+    dT = jnp.moveaxis(drive, 1, 0)
+
+    def body(h, inp):
+        at, dt = inp
+        h = at * h + dt
+        return h, h
+
+    if cfg.probe:
+        # per step: a*h + drive  ->  emulate with one mult + add over [T,B,Dr]
+        ys = aT * dT + dT
+        h = state["h"] + ys[-1]
+    elif t == 1:
+        h, ys = body(state["h"], (aT[0], dT[0]))
+        ys = ys[None]
+    else:
+        chunk = min(cfg.chunk, t)
+        while t % chunk:
+            chunk -= 1
+        h, ys = L.chunked_scan(body, state["h"], (aT, dT), chunk=chunk)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)               # [B,T,Dr]
+    out = (y * gate) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,99 @@
+"""Shared model layers: norms, FFNs, embeddings, chunked scan helper."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, x, p, eps):
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / (d_in ** 0.5))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+def ffn_apply(kind: str, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense FFN forward; MoE lives in repro.models.moe."""
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+        return h @ p["w_out"]
+    if kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_in"])
+        return h @ p["w_out"]
+    if kind == "sq_relu":   # Nemotron-4 squared ReLU, non-gated
+        h = jax.nn.relu(x @ p["w_in"])
+        return (h * h) @ p["w_out"]
+    if kind == "gelu":      # plain 2-layer GELU (MusicGen-style decoder FFN)
+        return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+    raise ValueError(f"unknown ffn kind {kind!r}")
+
+
+def ffn_init(kind: str, key, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, f, dtype),
+         "w_out": dense_init(ks[1], f, d, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Two-level (chunked) scan with rematerialization
+# ---------------------------------------------------------------------------
+
+def chunked_scan(body: Callable, init, xs, *, chunk: int, checkpoint: bool = True):
+    """``lax.scan(body, init, xs)`` with time chunking: the outer scan saves
+    only per-chunk carries; the inner scan is wrapped in ``jax.checkpoint``
+    so its residuals are recomputed in the backward pass (flash-style
+    memory behaviour for recurrences — RWKV/RG-LRU over 4k-500k steps).
+    Leading axis of every xs leaf must be divisible by ``chunk``."""
+    t = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), xs)
+
+    def chunk_body(carry, xc):
+        return jax.lax.scan(body, carry, xc)
+
+    if checkpoint:
+        chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    carry, ys_c = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((t,) + a.shape[2:]), ys_c)
+    return carry, ys

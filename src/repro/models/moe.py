@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN with content-based dispatch (paper-informed).
+
+The expert dispatch problem is the MoE instance of the paper's
+content-based routing: tokens (messages) are routed to experts
+(Rendezvous Points) under a per-destination capacity, exactly the
+``repro.core.routing`` plan — the same cumsum bucketing drives both.
+
+Implementation is gather/scatter-based (pjit-friendly, static shapes):
+  router -> top-k experts -> capacity plan -> gather tokens into
+  [E, C, D] buckets -> batched expert GEMMs -> weighted scatter-add.
+Sharding: expert tensors are annotated by the config (EP over a mesh
+axis when E divides it, else TP inside the expert d_ff); XLA inserts
+the collectives.  Overflowed tokens fall through with zero update
+(standard capacity-factor semantics; counted in aux stats).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing as R
+from repro.models import layers as L
+
+
+class MoEConfig(NamedTuple):
+    num_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    gated: bool = True                 # SwiGLU experts (Mixtral/Kimi style)
+    num_shared_experts: int = 0        # Kimi/DeepSeek shared expert(s)
+    router_aux_weight: float = 0.01    # load-balance loss weight
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.d_ff
+    p = {
+        "router": L.dense_init(ks[0], d_model, e, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e, d_model, f), jnp.float32)
+                 / (d_model ** 0.5)).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e, f, d_model), jnp.float32)
+                  / (f ** 0.5)).astype(dtype),
+    }
+    if cfg.gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d_model, f), jnp.float32)
+                       / (d_model ** 0.5)).astype(dtype)
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = L.ffn_init("swiglu" if cfg.gated else "gelu",
+                                 ks[4], d_model, fs, dtype)
+    return p
+
+
+def capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for tiling
+
+
+def _pick_groups(n: int, target: int = 4096) -> int:
+    g = max(1, n // target)
+    while n % g:
+        g -= 1
+    return g
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig,
+              num_groups: int | None = None) -> tuple[jnp.ndarray, dict]:
+    """x: [B, T, D] -> ([B, T, D], aux stats incl. load-balance loss).
+
+    GShard-style *grouped* dispatch: tokens are split into G contiguous
+    groups, each with its own cumsum plan and per-group capacity.  The
+    cumsum (a reduce-window in XLA) is then O(Ng) per group instead of a
+    single prefix scan over every (token, k) assignment in the global
+    batch — measured 250x of the layer's FLOPs at 1M tokens — and the
+    group dim shards cleanly over the batch axes.
+    """
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.num_experts, cfg.top_k
+    g = num_groups or _pick_groups(n)
+    ng = n // g
+    from repro.launch import shardctx
+    xt = x.reshape(g, ng, d)
+    xt = shardctx.constrain(xt, ("dp", None, None))
+
+    # keep xt in compute dtype: upcasting it here would hand XLA an f32
+    # copy that CSE then reuses for the bucket gather (2x memory traffic)
+    logits = jnp.einsum("gnd,de->gne", xt, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [G, Ng, E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # [G, Ng, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # per-group dispatch plan: sort-based position assignment — O(Ng*k)
+    # memory and compute, vs the one-hot cumsum's O(Ng*k*E) (the [G, NK, E]
+    # f32 one-hot was 13 TB of logical traffic at kimi's 1M-token batch).
+    cap = capacity(cfg, ng)
+    dest = expert_ids.reshape(g, ng * k)                     # [G, NK]
+    nk = ng * k
+    gidx = jnp.arange(g, dtype=jnp.int32)[:, None]
+    sidx = jnp.argsort(dest, axis=1, stable=True)
+    d_sorted = jnp.take_along_axis(dest, sidx, axis=1)
+    ar = jnp.broadcast_to(jnp.arange(nk, dtype=jnp.int32)[None], (g, nk))
+    is_start = jnp.concatenate(
+        [jnp.ones((g, 1), bool), d_sorted[:, 1:] != d_sorted[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(jnp.where(is_start, ar, 0), axis=1)
+    pos_sorted = ar - seg_start                              # rank within expert
+    pos = jnp.zeros((g, nk), jnp.int32).at[gidx, sidx].set(pos_sorted)
+    keep = pos < cap
+    raw_counts = jnp.zeros((g, e), jnp.int32).at[gidx, dest].add(1)
+    counts = jnp.minimum(raw_counts, cap)                    # [G, E]
+    overflow = raw_counts - counts
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                        # router prob mass
+    fe = jnp.mean(raw_counts.astype(jnp.float32), axis=0) / ng
+    aux_loss = cfg.router_aux_weight * e * jnp.sum(me * fe)
+
+    tok_idx = jnp.broadcast_to(
+        (jnp.arange(ng, dtype=jnp.int32)[:, None]), (ng, k)).reshape(ng * k)
+    tok_idx = jnp.broadcast_to(tok_idx[None], (g, ng * k))
+    slot = dest * cap + jnp.clip(pos, 0, cap - 1)
+    safe_slot = jnp.where(keep, slot, e * cap)               # e*cap = trash
+    idx_flat = jnp.zeros((g, e * cap + 1), jnp.int32) \
+        .at[gidx, safe_slot].set(tok_idx)[:, :e * cap]
+    kept_flat = jnp.zeros((g, e * cap + 1), bool) \
+        .at[gidx, safe_slot].set(keep)[:, :e * cap]
+    gate_flat = jnp.zeros((g, e * cap + 1), jnp.float32) \
+        .at[gidx, safe_slot].set(gate_vals.reshape(g, ng * k))[:, :e * cap]
+    idx = idx_flat.reshape(g, e, cap)
+    kept = kept_flat.reshape(g, e, cap)
+    gates = gate_flat.reshape(g, e, cap)
+
+    # gather -> expert GEMMs -> weighted scatter-add.  Activations are
+    # constrained to the expert-parallel compute layout (shardctx
+    # "ep"/"cap") or XLA replicates expert GEMMs on every chip.
+    # vmapped row-gather (emits operand_batching_dims, so GSPMD keeps the
+    # group dim sharded; take_along_axis lowers to a flat, replicated gather)
+    buckets = jax.vmap(lambda xg, ig: xg[ig])(
+        xt, idx.reshape(g, e * cap)).reshape(g, e, cap, d)
+    buckets = buckets * kept[..., None].astype(xt.dtype)     # [G, E, C, D]
+    buckets = shardctx.constrain(buckets, ("dp", "ep", "cap", None))
+    if cfg.gated:
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buckets, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", buckets, p["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buckets, p["w_in"]))
+    h = shardctx.constrain(h, ("dp", "ep", "cap", None))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_out"])  # [G, E, C, D]
+    expert_out = shardctx.constrain(expert_out, ("dp", "ep", "cap", None))
+    weighted = expert_out * (gates * kept)[..., None].astype(expert_out.dtype)
+    out = jax.vmap(lambda wg, ig: jnp.zeros((ng, d), x.dtype).at[ig].add(wg))(
+        weighted.reshape(g, e * cap, d).astype(x.dtype),
+        idx.reshape(g, e * cap))
+    out = shardctx.constrain(out, ("dp", None, None))
+
+    if cfg.num_shared_experts:
+        out = out + L.ffn_apply("swiglu" if cfg.gated else "gelu",
+                                p["shared"], xt)
+
+    stats = {
+        "aux_loss": aux_loss,
+        "overflow_frac": jnp.sum(overflow) / (n * k),
+        "load_max": jnp.max(counts) / cap,
+    }
+    return out.reshape(b, t, d), stats

@@ -1,0 +1,56 @@
+"""Positional encodings: RoPE, M-RoPE (Qwen2-VL), sinusoidal (MusicGen)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, T, H, D]; positions: [B, T] int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                              # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv    # [B, T, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray,
+                sections: tuple[int, int, int],
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head dim is split into (temporal,
+    height, width) sections, each rotated by its own position stream.
+
+    x: [B, T, H, D]; positions: [3, B, T] int32 (t/h/w — equal for text).
+    sections: frequency-pair counts per component, sum == D/2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)                               # [D/2]
+    # component id per frequency pair: [D/2] in {0,1,2}
+    comp = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32)])
+    pos_sel = jnp.take(positions, comp, axis=0)              # [D/2, B, T]
+    ang = jnp.moveaxis(pos_sel, 0, -1).astype(jnp.float32) * inv  # [B, T, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, d_model: int,
+                         max_scale: float = 10000.0) -> jnp.ndarray:
+    """positions: [B, T] -> [B, T, d_model] (MusicGen decoder)."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(max_scale) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,157 @@
+"""RWKV-6 "Finch" blocks: data-dependent-decay linear recurrence.
+
+Time mixing: per-head matrix state S [Dk, Dv], per-channel decay
+w_t = exp(-exp(ww_t)) with a low-rank data-dependent component
+(the Finch contribution), bonus term u on the current token, output
+group-norm + SiLU gate.  Channel mixing: token-shifted squared-ReLU.
+
+Train path: two-level chunked scan (``layers.chunked_scan``) — O(1)
+state memory per chunk with rematerialized backward, the recurrence
+analogue of flash attention.  Decode: single-step state update (O(1)
+per token — why this arch RUNS the 500k-decode cell).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class RWKVConfig(NamedTuple):
+    n_heads: int
+    d_head: int
+    decay_lora: int = 64
+    chunk: int = 64
+    # probe mode (dry-run cost analysis only): replace the sequential wkv
+    # scan with a loop-free, FLOP-isomorphic emulation so XLA's
+    # cost_analysis counts every step (see launch/probe.py).  NOT a valid
+    # forward pass.
+    probe: bool = False
+
+
+def init_time_mix(key, d_model: int, cfg: RWKVConfig, dtype) -> dict:
+    ks = jax.random.split(key, 10)
+    h, dh = cfg.n_heads, cfg.d_head
+    dim = h * dh
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_v": jnp.full((d_model,), 0.5, dtype),
+        "mu_w": jnp.full((d_model,), 0.5, dtype),
+        "mu_g": jnp.full((d_model,), 0.5, dtype),
+        "wr": L.dense_init(ks[0], d_model, dim, dtype),
+        "wk": L.dense_init(ks[1], d_model, dim, dtype),
+        "wv": L.dense_init(ks[2], d_model, dim, dtype),
+        "wg": L.dense_init(ks[3], d_model, dim, dtype),
+        "wo": L.dense_init(ks[4], dim, d_model, dtype),
+        # data-dependent decay (Finch): w = base + lora
+        "w_base": jnp.full((dim,), -4.0, dtype),
+        "w_lora_a": L.dense_init(ks[5], d_model, cfg.decay_lora, dtype),
+        "w_lora_b": L.dense_init(ks[6], cfg.decay_lora, dim, dtype,
+                                 scale=0.01),
+        "bonus_u": jnp.zeros((h, dh), dtype),
+        "ln_scale": jnp.ones((h, dh), dtype),
+    }
+
+
+def init_channel_mix(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "wk": L.dense_init(ks[0], d_model, d_ff, dtype),
+        "wv": L.dense_init(ks[1], d_ff, d_model, dtype),
+        "wr": L.dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x[t-1] with ``prev`` feeding position 0.  x: [B,T,D]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _wkv_step(state, inputs):
+    """state: [B,H,Dk,Dv]; inputs r,k,v: [B,H,D*], w: [B,H,Dk], u: [H,Dk]."""
+    r, k, v, w, u = inputs
+    kv = k[..., :, None] * v[..., None, :]                  # [B,H,Dk,Dv]
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    return state, y
+
+
+def time_mix_apply(p: dict, x: jnp.ndarray, cfg: RWKVConfig,
+                   state: dict | None = None
+                   ) -> tuple[jnp.ndarray, dict]:
+    """x: [B, T, D].  state (decode): {"shift": [B,D], "wkv": [B,H,Dk,Dv]}.
+    Returns (out, new_state).  Train: state=None -> zero init, chunked scan."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype),
+                 "wkv": jnp.zeros((b, h, dh, dh), jnp.float32)}
+    xs = _shift(x, state["shift"])
+    xf = x.astype(jnp.float32)
+    r = (_mix(x, xs, p["mu_r"]) @ p["wr"]).reshape(b, t, h, dh).astype(jnp.float32)
+    k = (_mix(x, xs, p["mu_k"]) @ p["wk"]).reshape(b, t, h, dh).astype(jnp.float32)
+    v = (_mix(x, xs, p["mu_v"]) @ p["wv"]).reshape(b, t, h, dh).astype(jnp.float32)
+    g = (_mix(x, xs, p["mu_g"]) @ p["wg"]).reshape(b, t, h, dh)
+    xw = _mix(x, xs, p["mu_w"])
+    ww = p["w_base"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(ww, -20.0, 4.0))).reshape(b, t, h, dh)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    rT = jnp.moveaxis(r, 1, 0)   # [T,B,H,dh]
+    kT = jnp.moveaxis(k, 1, 0)
+    vT = jnp.moveaxis(v, 1, 0)
+    wT = jnp.moveaxis(w, 1, 0)
+
+    def body(s, inp):
+        rr, kk, vv, wwv = inp
+        return _wkv_step(s, (rr, kk, vv, wwv, u))
+
+    if cfg.probe:
+        # FLOP-isomorphic, loop-free stand-in for the recurrence: per step
+        # kv outer + decay mult + bonus + r-contraction, batched over T.
+        kv = kT[..., :, None] * vT[..., None, :]           # [T,B,H,dk,dv]
+        sw = wT[..., None] * kv                            # ~ w*S mult
+        y = jnp.einsum("tbhk,tbhkv->tbhv", rT,
+                       sw + u[None, None, :, :, None] * kv)
+        wkv_state = state["wkv"] + sw[-1]
+    elif t == 1:
+        wkv_state, y = body(state["wkv"], (rT[0], kT[0], vT[0], wT[0]))
+        y = y[None]
+    else:
+        chunk = min(cfg.chunk, t)
+        while t % chunk:
+            chunk -= 1
+        wkv_state, y = L.chunked_scan(body, state["wkv"],
+                                      (rT, kT, vT, wT), chunk=chunk)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, t, h, dh)          # [B,T,H,dh]
+    # per-head group norm + silu gate
+    y = L.rms_norm(y, jnp.ones((dh,), jnp.float32), 1e-5) * p["ln_scale"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(g)).reshape(b, t, h * dh)
+    out = y @ p["wo"]
+    new_state = {"shift": x[:, -1, :], "wkv": wkv_state}
+    return out, new_state
+
+
+def channel_mix_apply(p: dict, x: jnp.ndarray,
+                      state: jnp.ndarray | None = None
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV channel mix.  state: [B, D] previous token (decode)."""
+    b, t, d = x.shape
+    if state is None:
+        state = jnp.zeros((b, d), x.dtype)
+    xs = _shift(x, state)
+    k = _mix(x, xs, p["mu_k"]) @ p["wk"]
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(_mix(x, xs, p["mu_r"]) @ p["wr"])
+    return r * (k @ p["wv"]), x[:, -1, :]

@@ -1,0 +1,386 @@
+"""Composable decoder stack hosting all 10 assigned architectures.
+
+An architecture is an ``ArchConfig``: a layer *pattern* (cycled kinds —
+attention / RWKV6 / RG-LRU recurrent), an FFN kind (dense GLU variants,
+squared-ReLU, MoE), attention geometry (GQA/MQA, windows, RoPE/M-RoPE),
+and embedding geometry.  Layers with identical kind are *stacked* and
+driven by ``lax.scan`` (small HLO, fast compile at 80 layers); hybrid
+patterns (RecurrentGemma 2:1) scan over repeating groups.
+
+Three entry points (the shapes the dry-run lowers):
+  ``train_step``   — fwd + loss + bwd + AdamW update      (train_4k)
+  ``prefill``      — forward, emit logits + caches        (prefill_32k)
+  ``decode_step``  — one token against the cache/state    (decode_* / long_*)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import griffin as G
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import positional as pos_mod
+from repro.models import rwkv as W
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    pattern: tuple = ("attn",)          # cycled layer kinds
+    ffn: str = "swiglu"                 # dense ffn kind or "moe"
+    moe: M.MoEConfig | None = None
+    first_k_dense: int = 0              # leading dense-FFN layers (Kimi)
+    qkv_bias: bool = False
+    window: int | None = None
+    rope: str = "rope"                  # "rope" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = (16, 24, 24)
+    pos_emb: str = "none"               # "none" | "sinusoidal"
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    rwkv: W.RWKVConfig | None = None
+    rglru: G.RGLRUConfig | None = None
+    vlm: bool = False                   # expects vision_embeds in the batch
+    modality: str = "text"              # doc tag: text | vision | audio
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+    chunk_q: int = 512
+    # long-context capability tag: full attention archs skip long_500k
+    subquadratic: bool = False
+
+    # ---- derived ----
+    def attn_cfg(self) -> A.AttnConfig:
+        return A.AttnConfig(self.n_heads, self.n_kv_heads, self.d_head,
+                            self.qkv_bias, self.window, self.rope,
+                            self.rope_theta, self.mrope_sections, self.chunk_q)
+
+    def stacks(self) -> list[tuple[tuple[str, ...], int]]:
+        """Layer plan as (kinds-per-group, repeat) with heterogeneous
+        prefixes (first_k_dense) and pattern tails split off."""
+        kinds = []
+        for i in range(self.n_layers):
+            k = self.pattern[i % len(self.pattern)]
+            if k == "attn":
+                f = "dense" if (self.ffn != "moe" or i < self.first_k_dense) \
+                    else "moe"
+                kinds.append(f"attn+{f}")
+            else:
+                kinds.append(k)
+        out: list[tuple[tuple[str, ...], int]] = []
+        g = len(self.pattern)
+        i = 0
+        while i < len(kinds):
+            # greedily take maximal repeats of the next group of size g
+            group = tuple(kinds[i:i + g])
+            r = 1
+            while kinds[i + r * g: i + (r + 1) * g] == list(group):
+                r += 1
+            out.append((group, r))
+            i += r * g
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, kind: str, key) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    p = {"norm1": L.init_norm(cfg.norm, d, dt),
+         "norm2": L.init_norm(cfg.norm, d, dt)}
+    if kind.startswith("attn"):
+        p["attn"] = A.init_attn(ks[0], d, cfg.attn_cfg(), dt)
+        if kind.endswith("+moe"):
+            p["moe"] = M.init_moe(ks[1], d, cfg.moe, dt)
+        else:
+            fk = cfg.ffn if cfg.ffn != "moe" else "swiglu"
+            p["ffn"] = L.ffn_init(fk, ks[1], d, cfg.d_ff, dt)
+    elif kind == "rwkv":
+        p["tmix"] = W.init_time_mix(ks[0], d, cfg.rwkv, dt)
+        p["cmix"] = W.init_channel_mix(ks[1], d, cfg.d_ff, dt)
+    elif kind == "rec":
+        p["rec"] = G.init_rglru_block(ks[0], d, cfg.rglru, dt)
+        p["ffn"] = L.ffn_init(cfg.ffn, ks[1], d, cfg.d_ff, dt)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 3 + len(cfg.stacks()))
+    dt = cfg.param_dtype
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ks[1], cfg.d_model, cfg.vocab, dt)
+    stacks = []
+    for si, (kinds, repeat) in enumerate(cfg.stacks()):
+        group_keys = jax.random.split(ks[3 + si], repeat)
+
+        def init_group(k):
+            kk = jax.random.split(k, len(kinds))
+            return {f"pos{i}": _init_layer(cfg, kind, kk[i])
+                    for i, kind in enumerate(kinds)}
+
+        stacks.append(jax.vmap(init_group)(group_keys))
+    params["stacks"] = stacks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application (one layer, pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def _cast_params(p, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, p)
+
+
+def _apply_layer(cfg: ArchConfig, kind: str, p: dict, x, positions,
+                 cache: dict | None, lengths, decode: bool):
+    """Returns (x, new_cache, aux_loss)."""
+    p = _cast_params(p, cfg.compute_dtype)
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if kind.startswith("attn"):
+        h = L.apply_norm(cfg.norm, x, p["norm1"], eps)
+        if decode:
+            a_out, new_attn = A.decode_attention_step(
+                p["attn"], h, cache["attn"], lengths, cfg.attn_cfg())
+        else:
+            a_out, new_attn = A.causal_attention(
+                p["attn"], h, positions, cfg.attn_cfg())
+        x = x + a_out
+        h = L.apply_norm(cfg.norm, x, p["norm2"], eps)
+        if kind.endswith("+moe"):
+            f_out, stats = M.moe_apply(p["moe"], h, cfg.moe)
+            aux = aux + stats["aux_loss"]
+        else:
+            fk = cfg.ffn if cfg.ffn != "moe" else "swiglu"
+            f_out = L.ffn_apply(fk, p["ffn"], h)
+        x = x + f_out
+        return x, {"attn": new_attn}, aux
+    if kind == "rwkv":
+        h = L.apply_norm(cfg.norm, x, p["norm1"], eps)
+        t_out, tstate = W.time_mix_apply(
+            p["tmix"], h, cfg.rwkv, cache["tmix"] if decode else None)
+        x = x + t_out
+        h = L.apply_norm(cfg.norm, x, p["norm2"], eps)
+        c_out, cstate = W.channel_mix_apply(
+            p["cmix"], h, cache["cmix"] if decode else None)
+        x = x + c_out
+        return x, {"tmix": tstate, "cmix": cstate}, aux
+    if kind == "rec":
+        h = L.apply_norm(cfg.norm, x, p["norm1"], eps)
+        r_out, rstate = G.rglru_block_apply(
+            p["rec"], h, cfg.rglru, cache["rec"] if decode else None)
+        x = x + r_out
+        h = L.apply_norm(cfg.norm, x, p["norm2"], eps)
+        x = x + L.ffn_apply(cfg.ffn, p["ffn"], h)
+        return x, {"rec": rstate}, aux
+    raise ValueError(kind)
+
+
+def _empty_cache_layer(cfg: ArchConfig, kind: str, batch: int, seq: int) -> dict:
+    dt = cfg.compute_dtype
+    if kind.startswith("attn"):
+        return {"attn": A.init_cache(cfg.attn_cfg(), batch, seq, dt)}
+    if kind == "rwkv":
+        h, dh = cfg.rwkv.n_heads, cfg.rwkv.d_head
+        return {"tmix": {"shift": jnp.zeros((batch, cfg.d_model), dt),
+                         "wkv": jnp.zeros((batch, h, dh, dh), jnp.float32)},
+                "cmix": jnp.zeros((batch, cfg.d_model), dt)}
+    if kind == "rec":
+        r = cfg.rglru
+        return {"rec": {"h": jnp.zeros((batch, r.d_rnn), jnp.float32),
+                        "conv": jnp.zeros((batch, r.conv_width - 1, r.d_rnn), dt)}}
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int) -> list:
+    caches = []
+    for kinds, repeat in cfg.stacks():
+        group = {f"pos{i}": _empty_cache_layer(cfg, kind, batch, seq_len)
+                 for i, kind in enumerate(kinds)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (repeat,) + a.shape), group))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params, batch: dict,
+           positions=None) -> tuple[jnp.ndarray, Any]:
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    b, t = tokens.shape
+    if cfg.vlm and "vision_embeds" in batch:
+        vm = batch["vision_mask"][..., None]
+        x = jnp.where(vm, batch["vision_embeds"].astype(x.dtype), x)
+    if positions is None:
+        if cfg.rope == "mrope":
+            positions = batch.get("mrope_positions")
+            if positions is None:
+                base = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+                positions = jnp.broadcast_to(base[None], (3, b, t))
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    if cfg.pos_emb == "sinusoidal":
+        pe = pos_mod.sinusoidal_embedding(
+            positions if positions.ndim == 2 else positions[0], cfg.d_model)
+        x = x + pe.astype(x.dtype)
+    return x, positions
+
+
+def forward(cfg: ArchConfig, params, batch: dict, *, want_caches: bool = False):
+    """Full-sequence forward.  Returns (logits, aux_loss, caches|None)."""
+    x, positions = _embed(cfg, params, batch)
+    b, t = batch["tokens"].shape
+    aux_total = jnp.zeros((), jnp.float32)
+    all_caches = [] if want_caches else None
+    from repro.launch import shardctx
+
+    for (kinds, repeat), stack_p in zip(cfg.stacks(), params["stacks"]):
+
+        def group_body(carry, layer_p):
+            xx, aux = carry
+            new_caches = {}
+            for i, kind in enumerate(kinds):
+                xx, c, a = _apply_layer(cfg, kind, layer_p[f"pos{i}"], xx,
+                                        positions, None, None, False)
+                new_caches[f"pos{i}"] = c
+                aux = aux + a
+            # residual-stream constraint (sequence parallelism when active):
+            # placed on the scan carry so the saved per-layer activation is
+            # the *sharded* tensor, not a replicated one.
+            xx = shardctx.constrain_residual(xx)
+            return (xx, aux), (new_caches if want_caches else 0)
+
+        # remat: recompute within-layer intermediates in backward; only the
+        # [B, T, D] carry survives per layer.
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+        (x, aux_total), ys = jax.lax.scan(group_body, (x, aux_total), stack_p)
+        if want_caches:
+            all_caches.append(ys)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed.astype(x.dtype)
+    return logits, aux_total, all_caches
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict):
+    logits, aux, _ = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lsafe = jnp.clip(labels, 0, None)
+    # memory-lean CE: never materialize f32 log-probs over the vocab —
+    # logsumexp + label-logit gather fuse into reductions.
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    lab = jnp.take_along_axis(logits, lsafe[..., None], axis=-1)[..., 0]
+    nll = lse - lab.astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, params, batch: dict, pad_cache_to: int | None = None):
+    """Prefill: logits of the last position + caches for decode.
+
+    ``pad_cache_to``: total cache capacity for subsequent decode steps.
+    Attention caches are re-laid-out in decode ring order (slot = t mod
+    capacity); recurrent states need no padding."""
+    logits, aux, caches = forward(cfg, params, batch, want_caches=True)
+    t = batch["tokens"].shape[1]
+    if pad_cache_to is not None:
+        cap_full = pad_cache_to if cfg.window is None \
+            else min(pad_cache_to, cfg.window)
+
+        def fix(path, leaf):
+            keys = [getattr(p, "key", None) for p in path]
+            if "attn" not in keys or leaf.ndim != 5:
+                return leaf          # recurrent states pass through
+            cap = cap_full
+            if cap >= t:             # zero-pad; slots t.. stay free
+                pad = [(0, 0)] * 5
+                pad[2] = (0, cap - t)
+                return jnp.pad(leaf, pad)
+            # window < t: keep the last ``cap`` tokens in ring order
+            base = t - cap
+            slots = jnp.arange(cap)
+            src = base + ((slots - base) % cap)
+            return jnp.take(leaf, src, axis=2)
+
+        caches = jax.tree_util.tree_map_with_path(fix, caches)
+    return logits[:, -1, :], caches
+
+
+def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray,
+                caches: list, lengths: jnp.ndarray):
+    """One decode step.  tokens: [B, 1]; lengths: [B] tokens so far.
+    Returns (logits [B, V], new caches, lengths + 1)."""
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(lengths[None, :, None], (3,) + tokens.shape)
+    else:
+        positions = lengths[:, None]
+    x, _ = _embed(cfg, params, {"tokens": tokens}, positions=positions)
+    new_caches = []
+    for (kinds, repeat), stack_p, cache in zip(cfg.stacks(), params["stacks"],
+                                               caches):
+        def group_body(xx, args):
+            layer_p, layer_c = args
+            new_c = {}
+            for i, kind in enumerate(kinds):
+                xx, c, _ = _apply_layer(cfg, kind, layer_p[f"pos{i}"], xx,
+                                        positions, layer_c[f"pos{i}"],
+                                        lengths, True)
+                new_c[f"pos{i}"] = c
+            return xx, new_c
+
+        x, nc = jax.lax.scan(group_body, x, (stack_p, cache))
+        new_caches.append(nc)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed.astype(x.dtype))[:, 0, :]
+    return logits, new_caches, lengths + 1
+
+
+def param_count(cfg: ArchConfig, params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(cfg: ArchConfig, params) -> int:
+    """Active params per token (MoE: top_k + shared of the expert pool)."""
+    total = param_count(cfg, params)
+    if cfg.ffn != "moe":
+        return total
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    expert_leaves = 0
+    for stack_p in params["stacks"]:
+        for name, group in stack_p.items():
+            if "moe" in group:
+                for kk in ("w_in", "w_out", "w_gate"):
+                    if kk in group["moe"]:
+                        expert_leaves += int(group["moe"][kk].size)
+    return total - expert_leaves + int(expert_leaves * k / e)

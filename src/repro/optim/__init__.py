@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, global_norm, init, update  # noqa: F401
+from repro.optim.schedule import cosine_with_warmup  # noqa: F401

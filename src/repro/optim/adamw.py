@@ -1,0 +1,68 @@
+"""AdamW with global-norm clipping; moment dtype configurable (the Kimi
+1T config uses bf16 moments to fit HBM — see EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: object = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    m: object
+    v: object
+    step: jnp.ndarray
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig,
+           lr_scale: jnp.ndarray | float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mh = m1 / b1c
+        vh = v1 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m1.astype(cfg.moment_dtype), v1.astype(cfg.moment_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, step), {"grad_norm": gnorm}

@@ -1,0 +1,14 @@
+"""LR schedules (cosine w/ linear warmup — the production default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step: jnp.ndarray, *, warmup: int, total: int,
+                       floor: float = 0.1) -> jnp.ndarray:
+    """Multiplier in [floor, 1]; pass to AdamW ``lr_scale``."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

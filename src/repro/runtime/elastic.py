@@ -1,0 +1,53 @@
+"""Elastic scaling: re-mesh + re-shard a training state.
+
+A job checkpointed on mesh A resumes on mesh B (more pods, fewer pods,
+or a degraded pod with failed chips carved out).  The checkpoint layer
+stores unsharded logical arrays; this module recomputes shardings for
+the new mesh and re-places state.  The quadtree overlay is rebuilt from
+the new mesh shape (the paper's join/rebootstrap phase, done at
+re-launch time rather than via runtime discovery messages).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core.overlay import Overlay
+
+
+def remesh(old_shape: dict, new_devices: list, axis_names: tuple) -> "jax.sharding.Mesh":
+    """Build the largest mesh of the same axis structure that fits the
+    surviving device list (data axis absorbs the change)."""
+    n = len(new_devices)
+    model = old_shape[axis_names[-1]]
+    lead = n // model
+    if lead == 0 or lead * model != n:
+        raise ValueError(f"{n} devices cannot keep model={model}")
+    if len(axis_names) == 3:
+        pod = old_shape[axis_names[0]]
+        while pod > 1 and lead % pod:
+            pod //= 2
+        shape = (pod, lead // pod, model)
+    else:
+        shape = (lead, model)
+    devs = np.asarray(new_devices[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, axis_names)
+
+
+def reshard_state(state, sharding_fn: Callable, mesh) -> object:
+    """Re-place a host-side state pytree under ``sharding_fn(mesh)``
+    (same rules, new mesh) — the elastic-resume hot path."""
+    shardings = sharding_fn(mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s), state, shardings)
+
+
+def rebuild_overlay(mesh, **kw) -> Overlay:
+    """Overlay over the dp x model chip grid of the (possibly new) mesh."""
+    shape = dict(mesh.shape)
+    names = list(shape)
+    rows = int(np.prod([shape[n] for n in names[:-1]]))
+    cols = shape[names[-1]]
+    return Overlay.from_mesh_shape(rows, cols, **kw)

@@ -1,0 +1,57 @@
+"""Compute/communication overlap: microbatched gradient accumulation.
+
+The single-shot train step exposes one bulk gradient all-reduce at the
+end — zero overlap.  Microbatching splits the per-device batch into K
+slices scanned sequentially; XLA's async collectives then overlap the
+reduce of microbatch i with the compute of i+1 (and remat keeps
+activation memory at 1/K).  This is the framework's 1F1B-lite: no
+pipeline partitioning of layers (we shard layers by TP, not PP — at
+16x16 per pod, TP x DP saturates the torus; see DESIGN.md §5), but the
+same overlap principle applied to the data axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatched_grads(loss_fn: Callable, params, batch: dict,
+                       num_microbatches: int):
+    """Accumulate grads over K microbatches.  loss_fn(params, batch) ->
+    (loss, aux).  Batch leaves are split on axis 0 (must divide)."""
+    if num_microbatches == 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, aux, grads
+
+    def split(path, a):
+        # batch axis is 0 except for [3, B, T] m-rope position streams
+        key = getattr(path[-1], "key", "") if path else ""
+        ax = 1 if key == "mrope_positions" else 0
+        b = a.shape[ax]
+        assert b % num_microbatches == 0, (key, b, num_microbatches)
+        a = jnp.moveaxis(a, ax, 0)
+        a = a.reshape((num_microbatches, b // num_microbatches) + a.shape[1:])
+        return jnp.moveaxis(a, 1, ax + 1)
+
+    micro = jax.tree_util.tree_map_with_path(split, batch)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        (loss, aux), grads = grad_fn(params, mb)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+        return (loss_acc + loss, grads_acc), aux
+
+    zero_grads = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads), auxs = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_grads), micro)
+    k = float(num_microbatches)
+    grads = jax.tree.map(lambda g: g / k, grads)
+    aux = jax.tree.map(lambda a: a[-1], auxs)
+    return loss_sum / k, aux, grads

@@ -1,0 +1,55 @@
+"""Straggler mitigation: deadline-based backup re-execution bookkeeping.
+
+In a synchronous SPMD pod a slow chip stalls the whole step (every
+collective is a barrier).  Production mitigation is (a) detect the
+persistent straggler from per-step, per-rank timing, (b) re-slot the
+physical chip out (elastic re-mesh) or re-execute its *input shard* on
+a healthy backup rank (for data-parallel work, the microbatch is
+re-dispatchable — the paper's "function profiles can run at any
+matching RP" applied to gradient shards).
+
+The detector is host-side and framework-agnostic: feed it wall-times,
+it yields (straggler ranks, reassignment plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    num_ranks: int
+    window: int = 20           # steps of history
+    threshold: float = 1.5     # x median = straggler
+    patience: int = 3          # consecutive flags before acting
+    _hist: list = dataclasses.field(default_factory=list)
+    _flags: np.ndarray = None
+
+    def __post_init__(self):
+        if self._flags is None:
+            self._flags = np.zeros(self.num_ranks, np.int32)
+
+    def observe(self, step_times: np.ndarray) -> list[int]:
+        """step_times: [num_ranks] seconds for the last step.  Returns
+        ranks that crossed the patience threshold this step."""
+        st = np.asarray(step_times, np.float64)
+        self._hist.append(st)
+        if len(self._hist) > self.window:
+            self._hist.pop(0)
+        med = np.median(np.stack(self._hist), axis=0)
+        global_med = np.median(med)
+        slow = med > self.threshold * global_med
+        self._flags = np.where(slow, self._flags + 1, 0)
+        return [int(r) for r in np.nonzero(self._flags == self.patience)[0]]
+
+    def reassignment(self, stragglers: list[int]) -> dict[int, int]:
+        """Backup plan: straggler's shard re-executes on the least-loaded
+        healthy rank (deterministic: lowest median time)."""
+        if not stragglers:
+            return {}
+        med = np.median(np.stack(self._hist), axis=0)
+        healthy = [r for r in range(self.num_ranks) if r not in stragglers]
+        order = sorted(healthy, key=lambda r: med[r])
+        return {s: order[i % len(order)] for i, s in enumerate(stragglers)}

@@ -1,0 +1,268 @@
+"""Core R-Pulsar layer tests: SFC, overlay, routing, matching semantics,
+store, rules, serverless registry, pipelines."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (matching, overlay, pipeline, profiles as P,
+                        routing, rules, serverless, sfc, store)
+
+
+# ---------------------------------------------------------------- SFC
+
+@pytest.mark.parametrize("order", [1, 2, 4, 8])
+def test_sfc_bijection_and_adjacency(order):
+    n = 1 << order
+    d = jnp.arange(n * n, dtype=jnp.int32)
+    x, y = sfc.d2xy(d, order)
+    d2 = sfc.xy2d(x, y, order)
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d))
+    xs, ys = np.asarray(x), np.asarray(y)
+    steps = np.abs(np.diff(xs)) + np.abs(np.diff(ys))
+    assert (steps == 1).all()          # the curve is a single grid walk
+
+
+def test_sfc_locality():
+    """Nearby curve ids should be nearby in 2-D (locality preservation) —
+    the property the paper exploits for range routing."""
+    order = 8
+    d = jnp.arange((1 << order) ** 2 - 1, dtype=jnp.int32)
+    x, y = sfc.d2xy(d, order)
+    dist = np.abs(np.diff(np.asarray(x))) + np.abs(np.diff(np.asarray(y)))
+    assert dist.mean() == 1.0
+
+
+def test_index_to_rank_balanced():
+    order = 16
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 2**32, 100_000, dtype=np.uint32)
+                      .astype(np.int32))
+    r = np.asarray(sfc.index_to_rank(idx, 256, order))
+    assert r.min() >= 0 and r.max() < 256
+    counts = np.bincount(r, minlength=256)
+    assert counts.std() / counts.mean() < 0.2    # near-uniform
+
+
+def test_interest_regions_range_contiguity():
+    p = P.ProfileBuilder().add_range("lat", 100, 5000).build()
+    segs = sfc.interest_regions(p, order=16, granularity=4)
+    assert segs.ndim == 2 and segs.shape[1] == 2
+    assert (segs[:, 1] > segs[:, 0]).all()
+    assert (np.diff(segs[:, 0]) > 0).all()       # sorted, merged
+
+
+# ---------------------------------------------------------------- overlay
+
+def test_overlay_split_capacity():
+    ov = overlay.Overlay.from_mesh_shape(16, 16, capacity=4)
+    assert all(l.members.size <= 4 for l in ov.leaves())
+    total = sum(l.members.size for l in ov.leaves())
+    assert total == 256
+
+
+def test_overlay_master_election_and_failover():
+    ov = overlay.Overlay.from_mesh_shape(8, 8, capacity=4, replication=3)
+    m = ov.master_of(17)
+    ov2 = ov.on_failure(m)
+    m2 = ov2.master_of(17)
+    assert m2 != m
+    # deterministic: rebuilding gives the same master
+    assert overlay.Overlay.build(ov.coords, alive=ov2.alive,
+                                 capacity=4, replication=3).master_of(17) == m2
+
+
+def test_overlay_routing_table_failover():
+    ov = overlay.Overlay.from_mesh_shape(8, 8, capacity=4, replication=2)
+    t1 = ov.routing_table(granularity=6)
+    dead = int(np.unique(t1)[0])
+    t2 = ov.on_failure(dead).routing_table(granularity=6)
+    assert dead not in np.unique(t2)
+    assert t1.shape == t2.shape
+
+
+def test_overlay_replicas_distinct():
+    ov = overlay.Overlay.from_mesh_shape(8, 8, capacity=4, replication=3)
+    reps = ov.replicas_of(11)
+    assert len(set(reps.tolist())) == len(reps)
+    assert 11 in reps
+
+
+# ---------------------------------------------------------------- routing
+
+def test_dispatch_plan_conservation():
+    rng = np.random.default_rng(0)
+    dest = jnp.asarray(rng.integers(0, 16, 200), jnp.int32)
+    plan = routing.make_plan(dest, 16, 8)
+    kept = int(np.asarray(plan.keep).sum())
+    dropped = int(np.asarray(plan.overflow).sum())
+    assert kept + dropped == 200
+    assert (np.asarray(plan.counts) <= 8).all()
+
+
+def test_scatter_gather_roundtrip():
+    rng = np.random.default_rng(1)
+    dest = jnp.asarray(rng.integers(0, 8, 64), jnp.int32)
+    items = jnp.asarray(rng.standard_normal((64, 5)), jnp.float32)
+    plan = routing.make_plan(dest, 8, 16)
+    buckets = routing.scatter_to_buckets(items, plan, 8, 16)
+    back = routing.gather_from_buckets(buckets, plan)
+    keep = np.asarray(plan.keep)
+    np.testing.assert_allclose(np.asarray(back)[keep],
+                               np.asarray(items)[keep])
+
+
+def test_route_local_dest_in_range():
+    rng = np.random.default_rng(2)
+    idx = jnp.asarray(rng.integers(0, 2**32, 128, dtype=np.uint32)
+                      .astype(np.int32))
+    table = jnp.asarray(
+        overlay.Overlay.from_mesh_shape(4, 4).routing_table(6))
+    payload = jnp.ones((128, 3))
+    send, plan = routing.route_local(payload, idx, table, 16, 16)
+    assert send.shape == (16, 16, 3)
+    d = np.asarray(plan.dest)
+    assert d.min() >= 0 and d.max() < 16
+
+
+# ---------------------------------------------------------------- matching
+
+def test_matching_semantics_table():
+    drone = P.profile("Drone", "LiDAR")
+    num = P.ProfileBuilder().add_single("Drone").add_num("lat", 40).build()
+    pair = P.ProfileBuilder().add_pair("type", "image").build()
+    ints = [
+        P.ProfileBuilder().add_single("Drone").add_single("Li*").build(),
+        P.ProfileBuilder().add_single("Drone").add_single("Cam*").build(),
+        P.ProfileBuilder().add_range("lat", 38, 42).build(),
+        P.ProfileBuilder().add_range("lat", 50, 60).build(),
+        P.ProfileBuilder().add_pair("type", "ima*").build(),
+        P.ProfileBuilder().add_pair("type", "video").build(),
+        P.ProfileBuilder().add_any("type").build(),
+        P.ProfileBuilder().add_single("*").build(),
+    ]
+    mm = np.asarray(matching.match_matrix(
+        jnp.asarray(np.stack([drone, num, pair])),
+        jnp.asarray(np.stack(ints)))).astype(int)
+    expected = np.array([
+        [1, 0, 0, 0, 0, 0, 0, 1],
+        [0, 0, 1, 0, 0, 0, 0, 1],
+        [0, 0, 0, 0, 1, 0, 1, 1],
+    ])
+    np.testing.assert_array_equal(mm, expected)
+
+
+def test_matching_empty_interest_never_matches():
+    zero = jnp.zeros((1, P.PROFILE_WIDTH), jnp.int32)
+    data = jnp.asarray(P.profile("Drone"))[None]
+    assert not bool(matching.match_matrix(data, zero)[0, 0])
+
+
+# ---------------------------------------------------------------- store
+
+def test_store_query_exact_and_wildcard():
+    st = store.init_store(32, 4)
+    keys = jnp.asarray(np.stack([P.profile("Drone", t=f"img{i}")
+                                 for i in range(8)]))
+    vals = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+    st = store.store(st, keys, vals)
+    got, found = store.query_exact(st, keys[3])
+    assert bool(found)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(vals[3]))
+    _, hits, n = store.query_match(
+        st, jnp.asarray(P.ProfileBuilder().add_single("Drone").build()), 8)
+    assert int(n) == 8
+
+
+def test_store_lru_ring_overwrite():
+    st = store.init_store(4, 2)
+    keys = jnp.asarray(np.stack([P.profile(f"k{i}") for i in range(6)]))
+    st = store.store(st, keys, jnp.arange(12, dtype=jnp.float32).reshape(6, 2))
+    # oldest two (k0, k1) evicted
+    _, found0 = store.query_exact(st, keys[0])
+    _, found5 = store.query_exact(st, keys[5])
+    assert not bool(found0) and bool(found5)
+
+
+def test_store_delete_and_mask():
+    st = store.init_store(16, 2)
+    keys = jnp.asarray(np.stack([P.profile("a"), P.profile("b")]))
+    st = store.store(st, keys, jnp.ones((2, 2)),
+                     mask=jnp.asarray([True, False]))
+    _, fa = store.query_exact(st, keys[0])
+    _, fb = store.query_exact(st, keys[1])
+    assert bool(fa) and not bool(fb)
+    st = store.delete_matching(st, keys[0])
+    _, fa = store.query_exact(st, keys[0])
+    assert not bool(fa)
+
+
+# ---------------------------------------------------------------- rules
+
+def test_rule_priority_conflict_set():
+    eng = rules.RuleEngine([
+        rules.threshold_rule("low", 0, ">=", 0.0, rules.C_STORE_EDGE,
+                             priority=0),
+        rules.threshold_rule("high", 0, ">=", 10.0, rules.C_SEND_CORE,
+                             priority=5),
+    ])
+    fired, cons = eng(jnp.asarray([[20.0], [5.0], [-1.0]]))
+    assert list(np.asarray(cons)) == [rules.C_SEND_CORE, rules.C_STORE_EDGE,
+                                      rules.C_NONE]
+
+
+def test_rules_jittable():
+    eng = rules.RuleEngine([
+        rules.threshold_rule("r", 0, ">", 0.5, rules.C_DROP)])
+    fired, cons = jax.jit(eng.evaluate)(jnp.asarray([[0.9], [0.1]]))
+    assert list(np.asarray(cons)) == [rules.C_DROP, rules.C_NONE]
+
+
+# ---------------------------------------------------------------- serverless
+
+def test_function_registry_lifecycle():
+    reg = serverless.FunctionRegistry()
+    reg.store_function("f1", P.profile("topo", "edge"), lambda x: x + 1)
+    reg.store_function("f2", P.profile("topo", "core"), lambda x: x * 2)
+    interest = P.ProfileBuilder().add_single("topo").build()
+    hits = reg.start_function(interest)
+    assert {e.name for e, _ in hits} == {"f1", "f2"}
+    assert reg.statistics()["running"] == 2
+    assert reg.stop_function(P.profile("topo", "edge")) == 1
+    assert reg.statistics()["running"] == 1
+
+
+def test_function_registry_aot_cache_dedup():
+    reg = serverless.FunctionRegistry()
+    reg.store_function("f", P.profile("t"), lambda x: x * 2)
+    spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+    reg.start_function(P.profile("t"), spec)
+    reg.start_function(P.profile("t"), spec)
+    assert reg.statistics()["aot_cached"] == 1
+    reg.start_function(P.profile("t"), jax.ShapeDtypeStruct((8,), jnp.float32))
+    assert reg.statistics()["aot_cached"] == 2
+
+
+# ---------------------------------------------------------------- pipeline
+
+def _feat_stage(scale):
+    def fn(params, x):
+        y = x * scale
+        return y, jnp.stack([jnp.sum(y, -1), jnp.min(y, -1)], -1)
+    return fn
+
+
+def test_two_tier_pipeline_escalation():
+    eng = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 10.0, rules.C_SEND_CORE,
+                             priority=1),
+        rules.threshold_rule("bad", 1, "<", 0.0, rules.C_DROP, priority=5),
+    ])
+    p = pipeline.two_tier_pipeline(_feat_stage(0.5), _feat_stage(2.0), eng)
+    batch = jnp.asarray([[30.0, 10.0], [2.0, 2.0], [-5.0, -5.0]])
+    res = jax.jit(p.run)(batch)
+    assert list(np.asarray(res.escalated)) == [True, False, False]
+    assert list(np.asarray(res.dropped)) == [False, False, True]
+    # escalated item got the core transform; stored item kept edge output
+    np.testing.assert_allclose(np.asarray(res.outputs)[1],
+                               np.asarray(batch)[1] * 0.5)

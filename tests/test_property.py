@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import profiles as P
+from repro.core import routing, sfc
+from repro.data import create, dequeue, enqueue, size
+from repro.kernels.armatch import armatch, armatch_ref
+from repro.runtime.compression import dequantize, quantize
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(order=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1),
+       n=st.integers(1, 300))
+def test_hilbert_roundtrip_property(order, seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 1 << order, n), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 1 << order, n), jnp.int32)
+    d = sfc.xy2d(x, y, order)
+    x2, y2 = sfc.d2xy(d, order)
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y))
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       num_ranks=st.integers(1, 512))
+def test_index_to_rank_in_range(seed, num_ranks):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 2**32, 64, dtype=np.uint32)
+                      .astype(np.int32))
+    r = np.asarray(sfc.index_to_rank(idx, num_ranks, 16))
+    assert r.min() >= 0 and r.max() < num_ranks
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_index_to_rank_monotone(seed):
+    """Curve-order monotonicity: sorted ids map to sorted ranks (the
+    contiguous-segment ownership property the overlay relies on)."""
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.integers(0, 2**32, 128, dtype=np.uint32))
+    r = np.asarray(sfc.index_to_rank(
+        jnp.asarray(idx.astype(np.int32)), 64, 16))
+    assert (np.diff(r) >= 0).all()
+
+
+def _profile_strategy(rng_seed: int, n: int):
+    rng = np.random.default_rng(rng_seed)
+    out = []
+    for _ in range(n):
+        b = P.ProfileBuilder()
+        for _ in range(rng.integers(1, P.MAX_SLOTS + 1)):
+            k = rng.integers(0, 6)
+            attr = f"a{rng.integers(0, 5)}"
+            if k == 0:
+                b.add_single(attr + ("*" if rng.random() < 0.4 else ""))
+            elif k == 1:
+                b.add_pair(attr, f"v{rng.integers(0, 5)}")
+            elif k == 2:
+                b.add_pair(attr, "v*")
+            elif k == 3:
+                b.add_num(attr, int(rng.integers(-20, 20)))
+            elif k == 4:
+                lo = int(rng.integers(-20, 20))
+                b.add_range(attr, lo, lo + int(rng.integers(0, 10)))
+            else:
+                b.add_any(attr)
+        out.append(b.build())
+    return np.stack(out)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       m=st.integers(1, 40), n=st.integers(1, 40))
+def test_armatch_kernel_equals_oracle(seed, m, n):
+    data = jnp.asarray(_profile_strategy(seed, m))
+    ints = jnp.asarray(_profile_strategy(seed + 1, n))
+    np.testing.assert_array_equal(
+        np.asarray(armatch(data, ints, interpret=True)),
+        np.asarray(armatch_ref(data, ints)))
+
+
+@SET
+@given(dests=st.lists(st.integers(0, 7), min_size=1, max_size=200),
+       capacity=st.integers(1, 64))
+def test_dispatch_conservation_property(dests, capacity):
+    dest = jnp.asarray(dests, jnp.int32)
+    plan = routing.make_plan(dest, 8, capacity)
+    kept = int(np.asarray(plan.keep).sum())
+    dropped = int(np.asarray(plan.overflow).sum())
+    assert kept + dropped == len(dests)
+    counts = np.asarray(plan.counts)
+    assert (counts <= capacity).all()
+    # positions within a bucket are unique
+    d, p = np.asarray(plan.dest), np.asarray(plan.position)
+    kept_mask = np.asarray(plan.keep)
+    pairs = set(zip(d[kept_mask].tolist(), p[kept_mask].tolist()))
+    assert len(pairs) == kept
+
+
+@SET
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(1, 10)),
+                    min_size=1, max_size=30))
+def test_ringbuffer_fifo_property(ops):
+    """Ring buffer delivers accepted items in FIFO order, no loss."""
+    rb = create(32, (1,))
+    pushed, popped = [], []
+    counter = 0
+    for is_push, n in ops:
+        if is_push:
+            items = jnp.arange(counter, counter + n, dtype=jnp.float32)[:, None]
+            rb, acc = enqueue(rb, items)
+            pushed += list(range(counter, counter + int(acc)))
+            counter += n
+        else:
+            rb, out, valid = dequeue(rb, n)
+            popped += [int(v) for v in np.asarray(out[np.asarray(valid), 0])]
+    assert popped == pushed[: len(popped)]
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_quantize_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(500) * scale, jnp.float32)
+    c = quantize(g)
+    err = np.abs(np.asarray(dequantize(c)) - np.asarray(g)).max()
+    assert err <= float(c.scale) * 0.5 + 1e-6

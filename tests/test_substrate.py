@@ -1,0 +1,195 @@
+"""Substrate tests: optimizer, checkpoint/restart, elastic reshard,
+compression, stragglers, health -> overlay failover, data pipeline."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.core.overlay import Overlay
+from repro.data import Prefetcher, SyntheticTokens, create, dequeue, enqueue
+from repro.runtime import (HealthMonitor, StragglerDetector,
+                           compress_tree, cross_pod_allreduce, dequantize,
+                           init_errors, microbatched_grads, quantize,
+                           rebuild_overlay, remesh)
+from repro.optim.schedule import cosine_with_warmup
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adamw_descends_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = optim.init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = optim.update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_adamw_clip_norm():
+    cfg = optim.AdamWConfig(lr=1.0, clip_norm=1e-3, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = optim.init(params, cfg)
+    p1, _, m = optim.update({"w": jnp.full(3, 1e6)}, state, params, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.max(jnp.abs(p1["w"]))) < 1.0   # clipped update
+
+
+def test_schedule_shape():
+    s = np.asarray([cosine_with_warmup(jnp.asarray(i), warmup=10, total=100)
+                    for i in [0, 5, 10, 50, 100]])
+    assert s[0] == 0.0 and s[1] == 0.5 and s[2] == 1.0
+    assert s[3] < 1.0 and s[4] >= 0.1 - 1e-6
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_bf16_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                      "i": jnp.asarray(7, jnp.int32)}}
+        for s in (1, 2, 3):
+            cm.save(s, tree)
+        assert cm.all_steps() == [2, 3]
+        got, step = cm.restore(tree)
+        assert step == 3
+        for x, y in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(tree)):
+            assert x.dtype == y.dtype
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32))
+
+
+def test_checkpoint_atomicity_tmp_ignored():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save(1, {"x": jnp.ones(2)})
+        os.makedirs(os.path.join(d, "step_00000002.tmp"))  # crashed writer
+        assert cm.latest_step() == 1
+
+
+def test_train_state_resume_equivalence():
+    """Save mid-training, restore, continue: identical to uninterrupted."""
+    cfg = optim.AdamWConfig(lr=0.05, weight_decay=0.0)
+    params = {"w": jnp.asarray([2.0, -1.0])}
+    state = optim.init(params, cfg)
+    grads = lambda p: {"w": 2 * p["w"]}
+    # uninterrupted
+    p_ref, s_ref = params, state
+    for _ in range(10):
+        p_ref, s_ref, _ = optim.update(grads(p_ref), s_ref, p_ref, cfg)
+    # interrupted at step 5
+    p, s = params, state
+    for _ in range(5):
+        p, s, _ = optim.update(grads(p), s, p, cfg)
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save(5, (p, s))
+        (p, s), _ = cm.restore((p, s))
+    for _ in range(5):
+        p, s, _ = optim.update(grads(p), s, p, cfg)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(p_ref["w"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------- elastic
+
+def test_remesh_shrink():
+    devs = jax.devices() * 8 if len(jax.devices()) == 1 else jax.devices()
+    # simulate 8 "devices" by repetition is invalid for Mesh; test the math
+    # path with a single-device mesh instead:
+    m = remesh({"data": 4, "model": 1}, jax.devices(), ("data", "model"))
+    assert dict(m.shape) == {"data": len(jax.devices()), "model": 1}
+
+
+def test_rebuild_overlay_from_mesh():
+    m = remesh({"data": 1, "model": 1}, jax.devices(), ("data", "model"))
+    ov = rebuild_overlay(m, capacity=4)
+    assert sum(l.members.size for l in ov.leaves()) == len(jax.devices())
+
+
+# ---------------------------------------------------------------- health
+
+def test_health_sweep_and_overlay_failover():
+    hm = HealthMonitor(num_ranks=16, timeout_s=5.0)
+    now = 1000.0
+    for r in range(16):
+        hm.heartbeat(r, t=now)
+    hm.heartbeat(3, t=now - 100)   # stale
+    hm._last_seen[3] = now - 100
+    dead = hm.sweep(now=now)
+    assert dead == [3]
+    ov = Overlay.from_mesh_shape(4, 4, capacity=2)
+    ov2 = hm.apply_to_overlay(ov)
+    assert not ov2.alive[3] and ov2.alive.sum() == 15
+    assert 3 not in np.unique(ov2.routing_table(granularity=4))
+
+
+# ---------------------------------------------------------------- straggler
+
+def test_straggler_detection_patience():
+    det = StragglerDetector(8, window=10, threshold=1.5, patience=3)
+    flagged = []
+    for step in range(5):
+        t = np.full(8, 0.1)
+        t[5] = 0.9
+        flagged += det.observe(t)
+    assert flagged == [5]          # flagged exactly once, after patience
+    plan = det.reassignment([5])
+    assert 5 in plan and plan[5] != 5
+
+
+# ---------------------------------------------------------------- compression
+
+def test_error_feedback_accumulates():
+    g = {"w": jnp.asarray([1e-4, 2e-4, 1.0])}   # tiny values vanish in int8
+    errs = init_errors(g)
+    comp, errs = compress_tree(g, errs)
+    # the quantization residual is carried, not lost
+    assert float(jnp.abs(errs["w"][0])) > 0
+    total = dequantize(comp["w"]) + errs["w"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g["w"]),
+                               rtol=1e-6)
+
+
+def test_cross_pod_allreduce_shardmap():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices for a pod axis")
+
+
+# ---------------------------------------------------------------- data
+
+def test_synthetic_tokens_deterministic():
+    src = SyntheticTokens(vocab=100, seq_len=8, batch=2, seed=3)
+    a, b = src.batch_at(5), src.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < 100
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_prefetcher_delivers_in_order():
+    src = (dict(i=np.asarray([i])) for i in range(5))
+    pf = Prefetcher(iter(src), depth=2)
+    got = [int(item["i"][0]) for item in pf]
+    assert got == [0, 1, 2, 3, 4]
+
+
+def test_microbatched_grads_match_full():
+    def lf(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2), {}
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal((4, 2)), jnp.float32)}
+    batch = {"x": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+             "y": jnp.asarray(rng.standard_normal((8, 2)), jnp.float32)}
+    l1, _, g1 = microbatched_grads(lf, p, batch, 1)
+    l4, _, g4 = microbatched_grads(lf, p, batch, 4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]),
+                               rtol=1e-5)
