@@ -8,7 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment format).
 import sys
 
 from benchmarks import (messaging, pipeline_e2e, routing, scaling,
-                        store_query, tiering)
+                        store_query, streaming, tiering)
 
 SUITES = {
     "tiering": tiering.bench,          # paper Table I
@@ -17,6 +17,7 @@ SUITES = {
     "routing": routing.bench,          # paper Figs. 9-10
     "scaling": scaling.bench,          # paper Figs. 11-12
     "pipeline_e2e": pipeline_e2e.bench,  # paper Fig. 14
+    "streaming": streaming.bench,      # continuous stream analytics
 }
 
 

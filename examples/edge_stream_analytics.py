@@ -1,0 +1,96 @@
+"""Edge stream analytics: windowed anomaly detection on a sensor feed.
+
+The paper's motivating deployment, end to end: seismic/structural
+sensors on a bridge stream acceleration tuples to an edge RP.  The edge
+maintains sliding windows over the feed, the IF-THEN rule engine
+watches the per-window features, and only anomalous windows — a
+vibration burst — are escalated to the (capacity-bounded) core tier for
+the expensive damage model.  Everything between producer handoffs runs
+as a single XLA executable.
+
+    PYTHONPATH=src python examples/edge_stream_analytics.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pipe
+from repro.core import rules
+from repro.stream import (StreamConfig, StreamExecutor,
+                          window_feature_names)
+
+D = 3              # accel_rms, strain, temperature
+BATCH = 64         # sensor tuples per micro-batch
+STEPS = 30
+QUAKE = range(12, 18)     # steps during which the burst happens
+
+
+def edge_fn(params, batch):
+    """Edge pre-processing: pass window records through, expose the
+    window features (cols 0:5) to the rule engine."""
+    return batch, batch[:, :5]
+
+
+def core_fn(params, batch):
+    """Core damage model stand-in: a deliberate heavyweight transform
+    that only ever sees the escalated (compacted) windows."""
+    h = batch
+    for _ in range(16):
+        h = jnp.tanh(h @ params)
+    return h, batch[:, :5]
+
+
+def main():
+    cfg = StreamConfig(micro_batch=BATCH, window=32, stride=16,
+                       capacity=8 * BATCH, lateness=16.0)
+    # IF(window max accel >= 3.0) THEN escalate; quiet windows with few
+    # samples are stored at the edge for later batch upload.
+    engine = rules.RuleEngine([
+        rules.threshold_rule("burst", 1, ">=", 3.0, rules.C_SEND_CORE,
+                             priority=2),
+        rules.threshold_rule("thin_window", 4, "<", 8.0,
+                             rules.C_STORE_EDGE, priority=1),
+    ])
+    core_p = jnp.asarray(
+        np.random.default_rng(0).standard_normal((5 + D, 5 + D)) * 0.2,
+        jnp.float32)
+    pl = pipe.two_tier_pipeline(edge_fn, core_fn, engine, core_params=core_p,
+                                core_capacity=2)
+    ex = StreamExecutor(cfg, engine, pl)
+    state = ex.init_state(D)
+
+    rng = np.random.default_rng(42)
+    t0 = 0.0
+    print(f"features per window: {window_feature_names()}")
+    for step in range(STEPS):
+        accel = np.abs(rng.standard_normal(BATCH)).astype(np.float32) * 0.5
+        if step in QUAKE:
+            accel += rng.gamma(4.0, 1.5, BATCH).astype(np.float32)
+        items = np.stack([accel,
+                          rng.standard_normal(BATCH).astype(np.float32),
+                          np.full(BATCH, 21.5, np.float32)], axis=1)
+        ts = t0 + np.arange(BATCH, dtype=np.float32)
+        # one straggler tuple re-delivered from far in the past:
+        if step == 20:
+            ts[0] -= 500.0
+        t0 += BATCH
+        state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts))
+        esc = np.asarray(out.escalated)
+        if esc.any():
+            mx = np.asarray(out.features)[:, 1]
+            print(f"step {step:2d}: escalated windows "
+                  f"{np.nonzero(esc)[0].tolist()} (max accel "
+                  f"{', '.join(f'{v:.1f}' for v in mx[esc])})")
+
+    m = state.metrics
+    print(f"\n{int(m.items_offered)} tuples offered, "
+          f"{int(m.items_rejected)} rejected (backpressure), "
+          f"{int(m.items_late)} late-dropped")
+    print(f"{int(m.windows_emitted)} windows -> "
+          f"{int(m.windows_escalated)} escalated to core "
+          f"({int(m.core_overflow)} hit the core capacity limit), "
+          f"{int(m.windows_stored)} stored at edge")
+    print(f"step function traced {ex.trace_count} time(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -71,11 +71,18 @@ class DataDrivenPipeline:
         return self.run(batch)
 
     def _apply_stage(self, stage: Stage, outputs, live):
-        """Run a stage; core stages with a capacity run compacted."""
+        """Run a stage; core stages with a capacity run compacted.
+
+        Returns (outputs, features, processed): ``processed`` marks the
+        items the stage actually computed — capacity overflow items are
+        not processed (they shed to the edge result, paper's graceful
+        degradation), so the caller must not commit outputs or rule
+        consequences for them."""
         from repro.core import routing as RT
         cap = self.core_capacity
         if stage.placement != "core" or cap is None or cap >= live.shape[0]:
-            return stage.fn(stage.params, outputs)
+            out, feats = stage.fn(stage.params, outputs)
+            return out, feats, jnp.ones_like(live)
         dest = jnp.where(live, 0, 1).astype(jnp.int32)   # bucket 0 = core
         plan = RT.make_plan(dest, 2, cap)
         compact = RT.scatter_to_buckets(outputs, plan, 2, cap)[0]   # [C, ...]
@@ -86,14 +93,19 @@ class DataDrivenPipeline:
             .at[0].set(c_feats)
         full_out = RT.gather_from_buckets(pad_out, plan)
         full_feats = RT.gather_from_buckets(pad_feats, plan)
-        # items beyond capacity stay un-escalated (overflow -> edge result)
-        return full_out, full_feats
+        return full_out, full_feats, plan.keep
 
-    def run(self, batch: jnp.ndarray) -> PipelineResult:
+    def run(self, batch: jnp.ndarray,
+            live: jnp.ndarray | None = None) -> PipelineResult:
         """Jit-compatible: every stage runs on the full fixed-shape batch;
-        rule consequences mask which items the next stage *commits*."""
+        rule consequences mask which items the next stage *commits*.
+
+        ``live``: optional [N] bool entry mask — padding/ungated rows
+        (False) pass through untouched: no stage outputs committed, no
+        rules evaluated, no escalation, and they never consume core
+        capacity."""
         n = batch.shape[0]
-        live = jnp.ones((n,), bool)
+        live = jnp.ones((n,), bool) if live is None else live.astype(bool)
         escalated = jnp.zeros((n,), bool)
         stored = jnp.zeros((n,), bool)
         dropped = jnp.zeros((n,), bool)
@@ -101,13 +113,17 @@ class DataDrivenPipeline:
         outputs = batch
         feats_all = []
         for i, stage in enumerate(self.stages):
-            new_out, feats = self._apply_stage(stage, outputs, live)
+            new_out, feats, processed = self._apply_stage(stage, outputs, live)
             feats_all.append(feats)
-            # commit outputs only for live items (masked update keeps shapes)
-            mask = live.reshape((n,) + (1,) * (new_out.ndim - 1))
+            # commit outputs only for live, actually-processed items
+            # (masked update keeps shapes; overflow keeps edge results)
+            commit = live & processed
+            mask = commit.reshape((n,) + (1,) * (new_out.ndim - 1))
             outputs = jnp.where(mask, new_out, outputs)
             _, cons = self.engine.evaluate(feats)
-            cons = jnp.where(live, cons, consequence)
+            # unprocessed items keep their previous consequence: their
+            # stage features are gather padding, not real computation
+            cons = jnp.where(commit, cons, consequence)
             consequence = cons
             is_last = i == len(self.stages) - 1
             stored |= live & (cons == R.C_STORE_EDGE)

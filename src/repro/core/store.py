@@ -85,11 +85,17 @@ def query_match(st: ShardStore, interest: jnp.ndarray,
     """
     live = st.stamps >= 0
     hits = matching.profile_match(interest[None, :], st.keys) & live   # [C]
-    # rank hits by recency (stamp desc), take top max_results
+    # rank hits by recency (stamp desc), take top max_results; a k
+    # beyond the log capacity just pads the result with misses
+    k = min(max_results, st.stamps.shape[0])
     score = jnp.where(hits, st.stamps, -1)
-    top_idx = jax.lax.top_k(score, max_results)[1]
+    top_idx = jax.lax.top_k(score, k)[1]
     top_hit = score[top_idx] >= 0
     vals = jnp.where(top_hit[:, None], st.values[top_idx], 0)
+    pad = max_results - k
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        top_hit = jnp.pad(top_hit, (0, pad))
     return vals, top_hit, jnp.sum(hits.astype(jnp.int32))
 
 

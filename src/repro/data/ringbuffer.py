@@ -49,12 +49,13 @@ def enqueue(rb: RingBuffer, items: jnp.ndarray) -> tuple[RingBuffer, jnp.ndarray
     n_acc = jnp.minimum(n, free)
     idx = (rb.head + jnp.arange(n, dtype=jnp.int32)) % cap
     accept = jnp.arange(n, dtype=jnp.int32) < n_acc
-    # rejected rows write to a scratch row then restore: simpler — write
-    # old contents back for rejected rows
-    old = rb.buf[idx]
-    items = items.astype(rb.buf.dtype)
-    sel = accept.reshape((n,) + (1,) * (items.ndim - 1))
-    buf = rb.buf.at[idx].set(jnp.where(sel, items, old))
+    # rejected rows scatter to a discard row past the ring (accepted
+    # slots are distinct since n_acc <= cap; a restore-old-contents
+    # scheme would corrupt accepted rows when n > cap makes idx wrap
+    # onto duplicate slots)
+    safe_idx = jnp.where(accept, idx, cap)
+    buf = jnp.concatenate([rb.buf, jnp.zeros_like(rb.buf[:1])]) \
+        .at[safe_idx].set(items.astype(rb.buf.dtype))[:cap]
     return RingBuffer(buf, rb.head + n_acc, rb.tail), n_acc
 
 

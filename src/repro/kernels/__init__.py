@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the platform's compute hot-spots.
 
-  hilbert      — batched Hilbert SFC index (content-routing hot path)
-  armatch      — Associative-Rendezvous profile matching (RP match engine)
-  decode_attn  — flash-decode GQA attention w/ KV cache (serving hot spot)
+  hilbert       — batched Hilbert SFC index (content-routing hot path)
+  armatch       — Associative-Rendezvous profile matching (RP match engine)
+  decode_attn   — flash-decode GQA attention w/ KV cache (serving hot spot)
+  window_reduce — sliding-window reduction (stream-analytics hot path)
 
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper), ref.py (pure-jnp oracle).  Kernels are validated in

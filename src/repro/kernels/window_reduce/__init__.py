@@ -1,0 +1,2 @@
+from repro.kernels.window_reduce.ops import window_reduce  # noqa: F401
+from repro.kernels.window_reduce.ref import window_reduce_ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""Jit'd wrapper for the window_reduce kernel: masking, stride, padding.
+
+The kernel is a dense stride-1 sum/max/min; this wrapper provides the
+full ``repro.stream.windows`` reducer contract (mask-aware mean/count,
+arbitrary stride, partial tail windows) on top of it:
+
+* invalid rows are filled with the reduction identity before the call,
+* the block is row-padded so every ceil(T/stride) window start —
+  including partial tails — falls inside the stride-1 output,
+* stride > 1 is a row slice of the stride-1 result,
+* mean = kernel-sum / count; empty windows are forced to 0 to match
+  the jnp oracle exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.window_reduce.window_reduce import (BLOCK_ROWS, LANES,
+                                                       sliding_reduce_2d)
+
+_IDENT = {"sum": 0.0, "max": float(jnp.finfo(jnp.float32).min),
+          "min": float(jnp.finfo(jnp.float32).max)}
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "stride", "reducer", "partial",
+                                    "interpret"))
+def window_reduce(x: jnp.ndarray, valid: jnp.ndarray, window: int,
+                  stride: int, *, reducer: str = "sum", partial: bool = True,
+                  interpret: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask-aware windowed reduction: [T, D] f32 -> ([NW, D], [NW] count).
+
+    Same contract as ``repro.stream.windows.sliding_window`` (NW =
+    ceil(T/stride) or complete-only; reducer in sum/mean/max/min/count).
+    """
+    if not (0 < stride <= window):
+        raise ValueError(f"need 0 < stride <= window, got {stride}, {window}")
+    from repro.stream.windows import _frame, num_windows
+    t, d = x.shape
+    nw = num_windows(t, window, stride, partial)
+    valid = valid.astype(bool)
+    # count via the shared framing (cheap [T]-sized work, stays jnp)
+    _, mask = _frame(valid[:, None], valid, window, stride, partial)
+    count = jnp.sum(mask, axis=1).astype(jnp.int32)
+
+    op = "sum" if reducer in ("sum", "mean", "count") else reducer
+    if op not in _IDENT:
+        raise ValueError(f"unknown reducer {reducer!r}")
+    if reducer == "count":
+        return count.astype(x.dtype)[:, None] * jnp.ones((1, d), x.dtype), count
+
+    ident = jnp.asarray(_IDENT[op], jnp.float32)
+    xf = jnp.where(valid[:, None], x.astype(jnp.float32), ident)
+    # rows: cover every window's reach, then round the stride-1 output
+    # row count up to the sublane tile; lanes up to the 128-lane tile —
+    # all padding is the reduction identity so it never affects results.
+    reach = (nw - 1) * stride + window       # last row any window touches
+    base = max(t, reach)
+    rows = base + (-(base - window + 1)) % BLOCK_ROWS
+    pad_lanes = (-d) % LANES
+    xp = jnp.pad(xf, ((0, rows - t), (0, pad_lanes)),
+                 constant_values=_IDENT[op])
+    out1 = sliding_reduce_2d(xp, window, op=op, interpret=interpret)
+    out = out1[::stride][:nw, :d]
+    if reducer == "mean":
+        out = out / jnp.maximum(count, 1).astype(jnp.float32)[:, None]
+    if op in ("max", "min"):
+        out = jnp.where(count[:, None] > 0, out, 0)
+    return out.astype(x.dtype), count

@@ -1,0 +1,37 @@
+"""Pure-numpy oracle for the window_reduce kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def window_reduce_ref(x: np.ndarray, valid: np.ndarray, window: int,
+                      stride: int, reducer: str = "sum"
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Mask-aware windowed reduction, [T, D] -> ([NW, D], [NW] count)."""
+    x = np.asarray(x, np.float32)
+    valid = np.asarray(valid, bool)
+    t, d = x.shape
+    nw = -(-t // stride)
+    out = np.zeros((nw, d), np.float32)
+    count = np.zeros((nw,), np.int32)
+    for i in range(nw):
+        sl = slice(i * stride, min(i * stride + window, t))
+        v, m = x[sl], valid[sl]
+        count[i] = int(m.sum())
+        if reducer == "count":
+            out[i] = count[i]
+            continue
+        if count[i] == 0:
+            continue                      # empty windows reduce to 0
+        kept = v[m]
+        if reducer == "sum":
+            out[i] = kept.sum(0)
+        elif reducer == "mean":
+            out[i] = kept.sum(0) / count[i]
+        elif reducer == "max":
+            out[i] = kept.max(0)
+        elif reducer == "min":
+            out[i] = kept.min(0)
+        else:
+            raise ValueError(f"unknown reducer {reducer!r}")
+    return out, count

@@ -1,0 +1,13 @@
+from repro.stream.windows import (  # noqa: F401
+    apply_watermark,
+    sliding_window,
+    tumbling_window,
+    window_feature_names,
+    window_features,
+)
+from repro.stream.executor import (  # noqa: F401
+    StreamConfig,
+    StreamExecutor,
+    StreamMetrics,
+    StreamState,
+)

@@ -1,0 +1,245 @@
+"""Continuous micro-batch stream executor (ingest -> windows -> rules
+-> pipeline).
+
+This is the paper's edge analytics loop made concrete: producers post
+sensor tuples into the memory-mapped queue (``data.ringbuffer``), the
+edge RP consumes them in fixed-size micro-batches, computes windowed
+aggregates (``stream.windows``), evaluates the data-driven IF-THEN
+rules on the per-window features (``core.rules``), and pushes the
+window records through a ``DataDrivenPipeline`` whose rule-gated core
+stage is capacity-bounded — only flagged windows consume core compute.
+
+Everything per step is one fixed-shape pure function, so the whole loop
+compiles to **exactly one** XLA executable: after the first (warmup)
+step there is no retracing, no recompilation, no host round-trip except
+the producer handoff.  ``StreamExecutor.trace_count`` exposes the jit
+cache size so benchmarks/tests can assert that.
+
+Cross-batch window continuity: the executor carries the trailing
+``window - stride`` samples between steps, so every step emits exactly
+``micro_batch // stride`` *complete* windows and consecutive steps tile
+the stream with no gap and no double-count (requires ``micro_batch %
+stride == 0``).  The first windows of a run are partially masked (the
+carry starts invalid) — their ``count`` reflects it.
+
+Backpressure accounting mirrors the queue contract: items the ring
+rejects are counted, never silently dropped; flagged windows beyond the
+pipeline's ``core_capacity`` are counted as ``core_overflow`` (they
+keep their edge results — the paper's graceful-degradation trade).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rules as R
+from repro.core.pipeline import DataDrivenPipeline
+from repro.data import ringbuffer as rbuf
+from repro.stream import windows as W
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static shape/policy knobs; all fields participate in the single
+    jit trace, so changing any of them means a (single) recompile."""
+    micro_batch: int               # samples dequeued per step (B)
+    window: int                    # samples per window (W)
+    stride: int                    # window start spacing (S), S <= W
+    capacity: int = 4096           # ring-buffer capacity (items)
+    lateness: float = 0.0          # watermark slack (event-time units)
+    min_count: int = 1             # valid samples for a window to fire
+    backend: str = "jnp"           # "jnp" | "pallas" window reduction
+    interpret: bool = False        # Pallas interpret mode (CPU tests)
+
+    def __post_init__(self):
+        if not (0 < self.stride <= self.window):
+            raise ValueError(f"need 0 < stride <= window, got {self}")
+        if self.micro_batch % self.stride or self.micro_batch < self.stride:
+            raise ValueError("micro_batch must be a positive multiple of "
+                             f"stride, got {self}")
+        if self.capacity < self.micro_batch:
+            raise ValueError("capacity must hold one micro-batch")
+
+    @property
+    def windows_per_step(self) -> int:
+        return self.micro_batch // self.stride
+
+    @property
+    def carry_len(self) -> int:
+        return self.window - self.stride
+
+
+class StreamMetrics(NamedTuple):
+    """Monotone int32 counters, updated on-device every step."""
+    steps: jnp.ndarray
+    items_offered: jnp.ndarray     # producer -> enqueue attempts
+    items_accepted: jnp.ndarray    # made it into the ring
+    items_rejected: jnp.ndarray    # backpressure (ring full)
+    items_dequeued: jnp.ndarray    # consumed by the executor
+    items_late: jnp.ndarray        # dropped by the watermark
+    windows_emitted: jnp.ndarray   # windows with >= min_count samples
+    rules_fired: jnp.ndarray       # windows with consequence != NONE
+    windows_escalated: jnp.ndarray # sent to the core tier
+    windows_stored: jnp.ndarray    # store-at-edge consequence
+    windows_dropped: jnp.ndarray   # quality-dropped
+    core_overflow: jnp.ndarray     # flagged beyond core_capacity
+
+
+def _zero_metrics() -> StreamMetrics:
+    # distinct buffers per counter: the step donates its state, and XLA
+    # rejects donating one aliased buffer through several arguments
+    return StreamMetrics(*(jnp.zeros((), jnp.int32)
+                           for _ in StreamMetrics._fields))
+
+
+class StreamState(NamedTuple):
+    rb: rbuf.RingBuffer            # rows are [ts | features]: [cap, 1+D]
+    carry: jnp.ndarray             # [W-S, 1+D] trailing samples
+    carry_valid: jnp.ndarray       # [W-S] bool
+    max_ts: jnp.ndarray            # [] f32 running max event time
+    metrics: StreamMetrics
+
+
+class StepOutput(NamedTuple):
+    aggregates: jnp.ndarray        # [NW, D] mean window aggregate
+    features: jnp.ndarray          # [NW, 5] rule features (signal col)
+    window_count: jnp.ndarray      # [NW] valid samples per window
+    consequence: jnp.ndarray       # [NW] rule consequence codes
+    escalated: jnp.ndarray         # [NW] bool reached the core tier
+    outputs: jnp.ndarray           # [NW, ...] pipeline outputs
+
+
+class StreamExecutor:
+    """Drives a continuous stream through ring buffer -> windows ->
+    rules -> pipeline with a single traced step function.
+
+    engine: rule engine evaluated on the [NW, 5] window features
+    (``window_feature_names()`` gives the column order).
+    pipeline: run on the [NW, 5 + D] window records (features
+    concatenated with the mean aggregate) — stage fns can slice either.
+    """
+
+    def __init__(self, cfg: StreamConfig, engine: R.RuleEngine,
+                 pipeline: DataDrivenPipeline):
+        self.cfg = cfg
+        self.engine = engine
+        self.pipeline = pipeline
+        self._traces = 0
+        self._jstep = jax.jit(self._step, donate_argnums=(0,))
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, feature_dim: int) -> StreamState:
+        cfg = self.cfg
+        return StreamState(
+            rb=rbuf.create(cfg.capacity, (1 + feature_dim,)),
+            carry=jnp.zeros((cfg.carry_len, 1 + feature_dim), jnp.float32),
+            carry_valid=jnp.zeros((cfg.carry_len,), bool),
+            max_ts=jnp.asarray(jnp.finfo(jnp.float32).min),
+            metrics=_zero_metrics(),
+        )
+
+    @property
+    def trace_count(self) -> int:
+        """Number of step traces so far — 1 after warmup, forever."""
+        return self._traces
+
+    # -- the single-trace step --------------------------------------------
+    def _step(self, state: StreamState, items: jnp.ndarray,
+              ts: jnp.ndarray) -> tuple[StreamState, StepOutput]:
+        # the Python body runs exactly once per jit trace, so this
+        # counts (re)traces without reaching into jit internals
+        self._traces += 1
+        cfg, m = self.cfg, state.metrics
+        n_in = items.shape[0]
+        rows_in = jnp.concatenate(
+            [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
+            axis=1)
+        rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+
+        rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
+        valid, n_late, max_ts = W.apply_watermark(
+            rows[:, 0], valid, state.max_ts, cfg.lateness)
+
+        # cross-batch continuity: prepend the carried W-S samples
+        seq = jnp.concatenate([state.carry, rows], axis=0)
+        seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
+        sig = seq[:, 1:]
+        agg, wcount = W.sliding_window(
+            sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
+            backend=cfg.backend, partial=False, interpret=cfg.interpret)
+        feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
+                                     partial=False)
+
+        emit = wcount >= cfg.min_count
+        _, cons = self.engine.evaluate(feats)
+        cons = jnp.where(emit, cons, R.C_NONE)
+
+        record = jnp.concatenate([feats, agg], axis=1)     # [NW, 5 + D]
+        # non-emitted windows (count < min_count) enter the pipeline
+        # dead: no rules, no escalation, no core-capacity consumption
+        result = self.pipeline.run(record, live=emit)
+        escalated = result.escalated
+        n_esc = jnp.sum(escalated.astype(jnp.int32))
+        cap = self.pipeline.core_capacity
+        overflow = jnp.maximum(0, n_esc - cap) if cap is not None \
+            else jnp.zeros((), jnp.int32)
+
+        one = jnp.int32(1)
+        metrics = StreamMetrics(
+            steps=m.steps + one,
+            items_offered=m.items_offered + n_in,
+            items_accepted=m.items_accepted + n_acc,
+            items_rejected=m.items_rejected + (n_in - n_acc),
+            items_dequeued=m.items_dequeued
+            + jnp.sum(valid.astype(jnp.int32)) + n_late,
+            items_late=m.items_late + n_late,
+            windows_emitted=m.windows_emitted
+            + jnp.sum(emit.astype(jnp.int32)),
+            rules_fired=m.rules_fired
+            + jnp.sum((cons != R.C_NONE).astype(jnp.int32)),
+            windows_escalated=m.windows_escalated + n_esc,
+            windows_stored=m.windows_stored
+            + jnp.sum(result.stored.astype(jnp.int32)),
+            windows_dropped=m.windows_dropped
+            + jnp.sum(result.dropped.astype(jnp.int32)),
+            core_overflow=m.core_overflow + overflow,
+        )
+        new_state = StreamState(
+            rb=rb,
+            carry=seq[seq.shape[0] - cfg.carry_len:]
+            if cfg.carry_len else seq[:0],
+            carry_valid=seq_valid[seq_valid.shape[0] - cfg.carry_len:]
+            if cfg.carry_len else seq_valid[:0],
+            max_ts=max_ts,
+            metrics=metrics,
+        )
+        return new_state, StepOutput(agg, feats, wcount, cons, escalated,
+                                     result.outputs)
+
+    # -- public API ---------------------------------------------------------
+    def step(self, state: StreamState, items: jnp.ndarray,
+             ts: jnp.ndarray) -> tuple[StreamState, StepOutput]:
+        """One micro-batch tick: offer ``items [N, D]`` with event
+        timestamps ``ts [N]``, consume one window batch.  N is the
+        producer's batch size; keep it fixed across steps to stay on
+        the single trace.
+
+        Timestamps ride the ring as float32 (one row per sample), so
+        event-time resolution degrades past ~2^24 time units; scale
+        long-running tick counters (e.g. seconds since stream start,
+        not epoch nanoseconds) to stay inside that range."""
+        return self._jstep(state, items, ts)
+
+    def run(self, state: StreamState,
+            producer: Iterable[tuple[jnp.ndarray, jnp.ndarray]],
+            ) -> tuple[StreamState, list[StepOutput]]:
+        """Drain a producer iterable of (items, ts) micro-batches."""
+        outs = []
+        for items, ts in producer:
+            state, out = self.step(state, items, ts)
+            outs.append(out)
+        return state, outs

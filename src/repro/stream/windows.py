@@ -1,0 +1,194 @@
+"""Fixed-shape window operators for edge stream analytics.
+
+The paper's rule engine reacts to *computed results* over the sensor
+stream ("IF(RESULT >= 10) THEN ..."), which in every real deployment
+means *windowed aggregates* — the EdgeBench / serverless-IoT workload:
+tumbling and sliding windows over a sustained stream, with per-window
+features feeding the data-driven rules.
+
+TPU discipline identical to the rest of the repo: every operator is a
+pure function of fixed-shape arrays.  Ragged reality (partial tail
+windows, buffer underruns, late data) is carried in boolean masks, not
+shapes, so the whole ingest -> window -> rules path traces exactly once.
+
+Conventions
+-----------
+* A stream block is ``x: [T, D]`` samples with ``valid: [T]`` bool
+  (False rows are padding / underrun / late data — they contribute to
+  no window).
+* Window starts are ``0, stride, 2*stride, ...`` — ``ceil(T / stride)``
+  windows, so *every* sample belongs to >= 1 window and the tail
+  windows may be partial.  Partial windows are not dropped: their
+  ``count`` is just smaller, and callers gate on it (``min_count``).
+* Reducers are mask-aware: ``sum``/``mean``/``max``/``min``/``count``
+  built in, or any callable ``(vals [N, W, D], mask [N, W]) -> [N, D]``.
+
+The sliding hot path has a Pallas kernel
+(``repro.kernels.window_reduce``); pass ``backend="pallas"`` to use it.
+The jnp path is the oracle the kernel is tested against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Reducer = Union[str, Callable]
+
+#: feature columns produced by :func:`window_features`
+F_MEAN, F_MAX, F_MIN, F_SUM, F_COUNT = range(5)
+
+
+def window_feature_names() -> tuple[str, ...]:
+    return ("mean", "max", "min", "sum", "count")
+
+
+def num_windows(t: int, window: int, stride: int,
+                partial: bool = True) -> int:
+    """Windows over a [T] block.
+
+    partial=True: starts at 0, stride, ... < T — ceil(T/stride), tail
+    windows may extend past T (mask-handled).  partial=False: only
+    windows fully inside [0, T) — the executor's steady-state framing.
+    """
+    if t <= 0 or stride <= 0:
+        raise ValueError(f"need t > 0 and stride > 0, got {t}, {stride}")
+    if partial:
+        return -(-t // stride)
+    if t < window:
+        raise ValueError(f"partial=False needs t >= window, got {t} < {window}")
+    return (t - window) // stride + 1
+
+
+def _frame(x: jnp.ndarray, valid: jnp.ndarray, window: int, stride: int,
+           partial: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[T, D] -> ([NW, W, D] values, [NW, W] mask); tail padded invalid."""
+    t = x.shape[0]
+    nw = num_windows(t, window, stride, partial)
+    reach = (nw - 1) * stride + window          # last row any window touches
+    pad = max(0, reach - t)
+    xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    vp = jnp.pad(valid, (0, pad))               # padding rows invalid
+    starts = jnp.arange(nw, dtype=jnp.int32) * stride
+    idx = starts[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    return xp[idx], vp[idx]
+
+
+def _masked_reduce(vals: jnp.ndarray, mask: jnp.ndarray,
+                   reducer: Reducer) -> jnp.ndarray:
+    """vals [N, W, D], mask [N, W] -> [N, D].  Empty windows reduce to 0."""
+    if callable(reducer):
+        return reducer(vals, mask)
+    m = mask[:, :, None]
+    count = jnp.sum(mask, axis=1).astype(vals.dtype)[:, None]
+    if reducer == "count":
+        return jnp.broadcast_to(count, vals.shape[::2])
+    if reducer == "sum":
+        return jnp.sum(jnp.where(m, vals, 0), axis=1)
+    if reducer == "mean":
+        s = jnp.sum(jnp.where(m, vals, 0), axis=1)
+        return s / jnp.maximum(count, 1)
+    if reducer in ("max", "min"):
+        fill = jnp.finfo(vals.dtype).min if reducer == "max" \
+            else jnp.finfo(vals.dtype).max
+        op = jnp.max if reducer == "max" else jnp.min
+        r = op(jnp.where(m, vals, fill), axis=1)
+        return jnp.where(count > 0, r, 0)       # empty window -> 0, not +-inf
+    raise ValueError(f"unknown reducer {reducer!r}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "stride", "reducer", "backend",
+                                    "partial", "interpret"))
+def sliding_window(x: jnp.ndarray, valid: jnp.ndarray, window: int,
+                   stride: int, *, reducer: Reducer = "mean",
+                   backend: str = "jnp", partial: bool = True,
+                   interpret: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sliding-window reduction over a stream block.
+
+    x: [T, D]; valid: [T] bool.  Returns (out [NW, D], count [NW] int32)
+    with NW = ceil(T / stride) (``partial=True``) or
+    (T - window)//stride + 1 (``partial=False``, complete windows only —
+    what the executor uses so tail windows aren't double-counted across
+    micro-batches).  ``count`` is the number of valid samples per
+    window — 0 for fully-masked windows (whose out rows are 0), < window
+    for partial tail windows.
+
+    backend="pallas" routes sum/mean/max/min/count through the
+    ``window_reduce`` kernel (sliding hot path); other reducers and
+    callables always use the jnp path.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"x must be [T, D], got {x.shape}")
+    if not (0 < stride <= window):
+        raise ValueError(f"need 0 < stride <= window, got {stride}, {window}")
+    valid = valid.astype(bool)
+    if backend == "pallas" and not callable(reducer):
+        from repro.kernels.window_reduce import window_reduce
+        return window_reduce(x, valid, window, stride, reducer=reducer,
+                             partial=partial, interpret=interpret)
+    vals, mask = _frame(x, valid, window, stride, partial)
+    out = _masked_reduce(vals, mask, reducer)
+    count = jnp.sum(mask, axis=1).astype(jnp.int32)
+    return out, count
+
+
+def tumbling_window(x: jnp.ndarray, valid: jnp.ndarray, window: int, *,
+                    reducer: Reducer = "mean", backend: str = "jnp",
+                    interpret: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Non-overlapping windows (stride == window); partial tail masked."""
+    return sliding_window(x, valid, window, window, reducer=reducer,
+                          backend=backend, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride", "partial"))
+def window_features(x: jnp.ndarray, valid: jnp.ndarray, window: int,
+                    stride: int, partial: bool = True
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-window rule-engine features over the *first* data column.
+
+    Returns ([NW, 5] features — mean, max, min, sum, count of ``x[:, 0]``
+    — and [NW] int32 count).  One framing, all reductions; this is the
+    feature vector the executor hands to ``RuleEngine.evaluate``.
+    """
+    sig = x[:, :1]                               # [T, 1] signal column
+    vals, mask = _frame(sig, valid, window, stride, partial)
+    m = mask[:, :, None]
+    count = jnp.sum(mask, axis=1).astype(jnp.int32)
+    cf = jnp.maximum(count, 1).astype(x.dtype)[:, None]
+    s = jnp.sum(jnp.where(m, vals, 0), axis=1)
+    mx = jnp.where(count[:, None] > 0,
+                   jnp.max(jnp.where(m, vals, jnp.finfo(x.dtype).min), axis=1), 0)
+    mn = jnp.where(count[:, None] > 0,
+                   jnp.min(jnp.where(m, vals, jnp.finfo(x.dtype).max), axis=1), 0)
+    feats = jnp.concatenate([s / cf, mx, mn, s,
+                             count.astype(x.dtype)[:, None]], axis=-1)
+    return feats, count
+
+
+@jax.jit
+def apply_watermark(ts: jnp.ndarray, valid: jnp.ndarray,
+                    max_ts: jnp.ndarray, lateness: jnp.ndarray | float
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Event-time watermark with bounded lateness (stream-SQL semantics).
+
+    ts: [T] event timestamps; valid: [T]; max_ts: [] running max event
+    time over *previous* blocks; lateness: allowed slack.  The watermark
+    is ``max_ts - lateness``: samples older than it are *late* and get
+    masked out (the fixed-shape analogue of dropping them).  The late
+    test uses the watermark as of the block's arrival — a block's own
+    samples never declare each other late, so in-order streams lose
+    nothing regardless of block time-span; only data reordered *across*
+    blocks by more than ``lateness`` is dropped.
+
+    Returns (valid', n_late, new_max_ts) with the max advanced by this
+    block's valid samples.
+    """
+    valid = valid.astype(bool)
+    info = jnp.finfo(ts.dtype) if jnp.issubdtype(ts.dtype, jnp.inexact) \
+        else jnp.iinfo(ts.dtype)           # integer tick timestamps work too
+    late = valid & (ts < max_ts - lateness)
+    new_max = jnp.maximum(max_ts, jnp.max(jnp.where(valid, ts, info.min)))
+    return valid & ~late, jnp.sum(late.astype(jnp.int32)), new_max

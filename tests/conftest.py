@@ -1,0 +1,41 @@
+"""Tier-1 test harness: CPU-pinned, deterministic, seeded.
+
+Imported by pytest before any test module, i.e. before anything
+imports jax — the env pinning must happen here, not in a fixture.
+"""
+import os
+
+# Force CPU for tier-1 regardless of what accelerators the host
+# advertises, and keep XLA from grabbing every core for compilation.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+# Determinism knobs: partitionable threefry keys derive identically
+# under any sharding, and matmul precision stops depending on backend
+# autotuning choices.
+jax.config.update("jax_threefry_partitionable", True)
+jax.config.update("jax_default_matmul_precision", "highest")
+
+SEED = 20260730
+
+
+@pytest.fixture(scope="session")
+def session_seed() -> int:
+    """The fixed seed of record for this test session."""
+    return SEED
+
+
+@pytest.fixture()
+def rng(session_seed) -> np.random.Generator:
+    """Fresh, deterministically-seeded numpy generator per test."""
+    return np.random.default_rng(session_seed)
+
+
+@pytest.fixture()
+def key(session_seed):
+    """Deterministic jax PRNG key per test."""
+    return jax.random.PRNGKey(session_seed)

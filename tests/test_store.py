@@ -1,0 +1,96 @@
+"""ShardStore edge cases: ring eviction order, overflow queries,
+tombstone semantics."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import profiles as P
+from repro.core import store
+
+
+def _key(i: int) -> np.ndarray:
+    return P.ProfileBuilder().add_single("Sensor").add_pair("id", f"k{i}") \
+        .build()
+
+
+def _val(i: int, d: int = 2) -> np.ndarray:
+    return np.full((d,), float(i), np.float32)
+
+
+def _fill(st, lo, hi):
+    keys = jnp.asarray(np.stack([_key(i) for i in range(lo, hi)]))
+    vals = jnp.asarray(np.stack([_val(i) for i in range(lo, hi)]))
+    return store.store(st, keys, vals)
+
+
+def test_ring_eviction_overwrites_oldest_first():
+    st = store.init_store(capacity=4, value_dim=2)
+    st = _fill(st, 0, 4)
+    st = _fill(st, 4, 6)          # evicts k0, k1 (oldest stamps)
+    stamps = np.asarray(st.stamps)
+    # surviving stamps are exactly the 4 most recent insertions
+    np.testing.assert_array_equal(np.sort(stamps), [2, 3, 4, 5])
+    for i in (0, 1):
+        _, found = store.query_exact(st, jnp.asarray(_key(i)))
+        assert not bool(found), f"k{i} should have been evicted"
+    for i in (2, 3, 4, 5):
+        val, found = store.query_exact(st, jnp.asarray(_key(i)))
+        assert bool(found)
+        np.testing.assert_array_equal(np.asarray(val), _val(i))
+
+
+def test_query_match_after_overflow_returns_survivors_only():
+    st = store.init_store(capacity=4, value_dim=2)
+    st = _fill(st, 0, 7)          # 7 inserts into 4 slots: k3..k6 survive
+    wildcard = jnp.asarray(P.ProfileBuilder().add_single("Sensor")
+                           .add_any("id").build())
+    vals, hits, n = store.query_match(st, wildcard, max_results=8)
+    assert int(n) == 4
+    got = sorted(np.asarray(vals)[np.asarray(hits)][:, 0].tolist())
+    assert got == [3.0, 4.0, 5.0, 6.0]
+
+
+def test_masked_store_rows_consume_no_slots():
+    st = store.init_store(capacity=4, value_dim=2)
+    keys = jnp.asarray(np.stack([_key(i) for i in range(3)]))
+    vals = jnp.asarray(np.stack([_val(i) for i in range(3)]))
+    st = store.store(st, keys, vals, mask=jnp.asarray([True, False, True]))
+    assert int(st.cursor) == 2
+    _, found = store.query_exact(st, jnp.asarray(_key(1)))
+    assert not bool(found)
+    for i in (0, 2):
+        _, found = store.query_exact(st, jnp.asarray(_key(i)))
+        assert bool(found)
+
+
+def test_delete_matching_tombstones_hidden_from_query_exact():
+    st = store.init_store(capacity=8, value_dim=2)
+    st = _fill(st, 0, 4)
+    victim = jnp.asarray(P.ProfileBuilder().add_single("Sensor")
+                         .add_pair("id", "k1").build())
+    st = store.delete_matching(st, victim)
+    _, found = store.query_exact(st, jnp.asarray(_key(1)))
+    assert not bool(found)
+    # untouched neighbours still resolve
+    for i in (0, 2, 3):
+        val, found = store.query_exact(st, jnp.asarray(_key(i)))
+        assert bool(found)
+        np.testing.assert_array_equal(np.asarray(val), _val(i))
+    # tombstones are invisible to wildcard scans too
+    wildcard = jnp.asarray(P.ProfileBuilder().add_single("Sensor")
+                           .add_any("id").build())
+    _, _, n = store.query_match(st, wildcard, max_results=8)
+    assert int(n) == 3
+
+
+def test_tombstoned_slot_is_reused_by_ring_overwrite():
+    st = store.init_store(capacity=4, value_dim=2)
+    st = _fill(st, 0, 4)
+    st = store.delete_matching(st, jnp.asarray(_key(2)))
+    # two more inserts wrap: slots of k0, k1 get overwritten (cursor
+    # order, independent of the tombstone)
+    st = _fill(st, 4, 6)
+    _, found = store.query_exact(st, jnp.asarray(_key(2)))
+    assert not bool(found)
+    for i in (3, 4, 5):
+        _, found = store.query_exact(st, jnp.asarray(_key(i)))
+        assert bool(found)
