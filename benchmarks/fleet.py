@@ -1,0 +1,112 @@
+"""Sharded edge-fleet streaming: fleet items/sec and step latency vs E.
+
+Drives ``FleetExecutor`` — E edge shards as one ``shard_map`` step with
+core escalation over a single all-to-all — for E in {1, 4, 8} under 8
+forced host devices, and reports sustained fleet throughput, median and
+p99 per-step latency, and the jit trace count (asserted == 1: the whole
+fleet tick is one XLA executable).  Emits the same CSV row schema as
+``benchmarks/streaming.py``.
+
+The measurement runs in a subprocess: the forced host device count must
+be set before jax first initializes, and the parent harness has long
+since locked in its own platform.
+"""
+import os
+import subprocess
+import sys
+
+D = 16            # sensor feature width
+BATCH = 256       # items per shard per micro-batch
+STEPS = 100
+WARMUP = 5
+SHARD_COUNTS = (1, 4, 8)
+
+
+def bench():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-m", "benchmarks.fleet",
+                          "--child"], env=env, capture_output=True,
+                         text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError("fleet bench subprocess failed:\n"
+                           + out.stderr[-2000:])
+    for line in out.stdout.strip().splitlines():
+        print(line, flush=True)
+
+
+def _child():
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.core import pipeline as pipe
+    from repro.core import rules
+    from repro.stream import StreamConfig
+    from repro.stream.fleet import FleetConfig, FleetExecutor
+
+    def edge_fn(p, batch):
+        return batch, batch[:, :5]
+
+    def core_fn(p, batch):
+        h = batch
+        for _ in range(8):
+            h = jnp.tanh(h @ p)
+        return h, batch[:, :5]
+
+    core_p = jnp.asarray(
+        np.random.default_rng(0).standard_normal((5 + D, 5 + D)) * 0.1,
+        jnp.float32)
+    scfg = StreamConfig(micro_batch=BATCH, window=64, stride=32,
+                        capacity=4 * BATCH, lateness=64.0)
+    for e in SHARD_COUNTS:
+        engine = rules.RuleEngine([
+            rules.threshold_rule("hot_mean", 0, ">=", 0.25,
+                                 rules.C_SEND_CORE, priority=1),
+            rules.threshold_rule("sparse", 4, "<", 8.0,
+                                 rules.C_STORE_EDGE, priority=2),
+        ])
+        p = pipe.two_tier_pipeline(edge_fn, core_fn, engine,
+                                   core_params=core_p)
+        cfg = FleetConfig(stream=scfg, num_shards=e,
+                          num_core=max(1, e // 4), core_budget=2 * e)
+        ex = FleetExecutor(cfg, engine, p)
+        state = ex.init_state(D)
+
+        rng = np.random.default_rng(7)
+        lat, t0 = [], 0.0
+        for i in range(WARMUP + STEPS):
+            base = rng.standard_normal((e, BATCH, D)).astype(np.float32)
+            if (i // 20) % 2:
+                base[:, :, 0] += 0.5       # alternating hot regime
+            items = jnp.asarray(base)
+            ts = jnp.asarray(
+                np.tile(t0 + np.arange(BATCH, dtype=np.float32), (e, 1)))
+            t0 += BATCH
+            t = time.perf_counter()
+            state, out = ex.step(state, items, ts)
+            jax.block_until_ready(out)
+            if i >= WARMUP:
+                lat.append(time.perf_counter() - t)
+        lat = np.asarray(lat)
+        m = state.metrics.as_dict()
+        items_s = e * BATCH / np.median(lat)
+        assert ex.trace_count == 1, f"retraced: {ex.trace_count}"
+        row(f"fleet/E{e}_step", float(np.median(lat) * 1e6),
+            f"items_per_s={items_s:.0f}")
+        row(f"fleet/E{e}_p99", float(np.percentile(lat, 99) * 1e6),
+            f"esc={m['fleet']['windows_escalated']}"
+            f"/{m['fleet']['windows_emitted']}"
+            f";overflow={m['fleet_core_overflow']}"
+            f";traces={ex.trace_count}")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child()
+    else:
+        bench()

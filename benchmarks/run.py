@@ -7,7 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment format).
 """
 import sys
 
-from benchmarks import (messaging, pipeline_e2e, routing, scaling,
+from benchmarks import (fleet, messaging, pipeline_e2e, routing, scaling,
                         store_query, streaming, tiering)
 
 SUITES = {
@@ -18,6 +18,7 @@ SUITES = {
     "scaling": scaling.bench,          # paper Figs. 11-12
     "pipeline_e2e": pipeline_e2e.bench,  # paper Fig. 14
     "streaming": streaming.bench,      # continuous stream analytics
+    "fleet": fleet.bench,              # sharded edge fleet, E in {1,4,8}
 }
 
 

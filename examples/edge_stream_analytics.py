@@ -81,14 +81,14 @@ def main():
                   f"{np.nonzero(esc)[0].tolist()} (max accel "
                   f"{', '.join(f'{v:.1f}' for v in mx[esc])})")
 
-    m = state.metrics
-    print(f"\n{int(m.items_offered)} tuples offered, "
-          f"{int(m.items_rejected)} rejected (backpressure), "
-          f"{int(m.items_late)} late-dropped")
-    print(f"{int(m.windows_emitted)} windows -> "
-          f"{int(m.windows_escalated)} escalated to core "
-          f"({int(m.core_overflow)} hit the core capacity limit), "
-          f"{int(m.windows_stored)} stored at edge")
+    m = state.metrics.as_dict()        # one host pull for all counters
+    print(f"\n{m['items_offered']} tuples offered, "
+          f"{m['items_rejected']} rejected (backpressure), "
+          f"{m['items_late']} late-dropped")
+    print(f"{m['windows_emitted']} windows -> "
+          f"{m['windows_escalated']} escalated to core "
+          f"({m['core_overflow']} hit the core capacity limit), "
+          f"{m['windows_stored']} stored at edge")
     print(f"step function traced {ex.trace_count} time(s)")
 
 

@@ -70,6 +70,95 @@ class DataDrivenPipeline:
     def __call__(self, batch: jnp.ndarray) -> PipelineResult:
         return self.run(batch)
 
+    # -- core-stage split (fleet escalation runs the core tier remotely) --
+    @property
+    def core_index(self) -> int | None:
+        """Index of the first core-placement stage, or None."""
+        for i, stage in enumerate(self.stages):
+            if stage.placement == "core":
+                return i
+        return None
+
+    @property
+    def core_stage(self) -> Stage | None:
+        i = self.core_index
+        return None if i is None else self.stages[i]
+
+    def run_core(self, batch: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Apply the core stage fn to an (already compacted) batch.
+
+        This is the callable a fleet invokes on records gathered from
+        many edge shards — the stage runs bare, with no local rule
+        gating or capacity compaction; the caller owns both (the fleet
+        budget replaces per-device ``core_capacity``).
+        """
+        stage = self.core_stage
+        if stage is None:
+            raise ValueError("pipeline has no core stage")
+        return stage.fn(stage.params, batch)
+
+    def run_edge(self, batch: jnp.ndarray,
+                 live: jnp.ndarray | None = None
+                 ) -> tuple[PipelineResult, jnp.ndarray]:
+        """Run the stages *before* the first core stage — identical
+        semantics to the same prefix of :meth:`run` — and stop at the
+        escalation boundary.
+
+        Returns (partial result, [N] bool mask of items the rules sent
+        into the core stage).  ``result.outputs`` holds the edge-tier
+        outputs; ``result.escalated`` equals the returned mask.  With
+        no core stage the full pipeline runs and the mask is all-False.
+        """
+        n = batch.shape[0]
+        live = jnp.ones((n,), bool) if live is None else live.astype(bool)
+        stored = jnp.zeros((n,), bool)
+        dropped = jnp.zeros((n,), bool)
+        consequence = jnp.zeros((n,), jnp.int32)
+        outputs = batch
+        feats_all = []
+        stop = self.core_index if self.core_index is not None \
+            else len(self.stages)
+        for i in range(stop):
+            stage = self.stages[i]
+            new_out, feats = stage.fn(stage.params, outputs)
+            feats_all.append(feats)
+            mask = live.reshape((n,) + (1,) * (new_out.ndim - 1))
+            outputs = jnp.where(mask, new_out, outputs)
+            _, cons = self.engine.evaluate(feats)
+            cons = jnp.where(live, cons, consequence)
+            consequence = cons
+            stored |= live & (cons == R.C_STORE_EDGE)
+            dropped |= live & (cons == R.C_DROP)
+            if i + 1 < len(self.stages):
+                nxt = self.stages[i + 1]
+                goes_on = cons == R.C_SEND_CORE if nxt.placement == "core" \
+                    else (cons != R.C_DROP) & (cons != R.C_STORE_EDGE)
+                live = live & goes_on
+        core_live = live if self.core_index is not None \
+            else jnp.zeros((n,), bool)
+        return PipelineResult(outputs, consequence, core_live, stored,
+                              dropped, tuple(feats_all)), core_live
+
+    def commit_core(self, partial: PipelineResult, core_live: jnp.ndarray,
+                    core_out: jnp.ndarray, core_feats: jnp.ndarray,
+                    processed: jnp.ndarray) -> PipelineResult:
+        """Fold remotely-computed core-stage results back into a
+        :meth:`run_edge` partial result, replicating the commit/rule
+        logic of the core leg of :meth:`run`: only ``core_live &
+        processed`` items commit outputs and re-evaluate rules;
+        capacity-shed items keep their edge outputs and ``SEND_CORE``
+        consequence (graceful degradation)."""
+        n = core_out.shape[0]
+        commit = core_live & processed.astype(bool)
+        mask = commit.reshape((n,) + (1,) * (core_out.ndim - 1))
+        outputs = jnp.where(mask, core_out, partial.outputs)
+        _, cons = self.engine.evaluate(core_feats)
+        cons = jnp.where(commit, cons, partial.consequence)
+        stored = partial.stored | (core_live & (cons == R.C_STORE_EDGE))
+        dropped = partial.dropped | (core_live & (cons == R.C_DROP))
+        return PipelineResult(outputs, cons, core_live, stored, dropped,
+                              partial.stage_features + (core_feats,))
+
     def _apply_stage(self, stage: Stage, outputs, live):
         """Run a stage; core stages with a capacity run compacted.
 
@@ -83,17 +172,8 @@ class DataDrivenPipeline:
         if stage.placement != "core" or cap is None or cap >= live.shape[0]:
             out, feats = stage.fn(stage.params, outputs)
             return out, feats, jnp.ones_like(live)
-        dest = jnp.where(live, 0, 1).astype(jnp.int32)   # bucket 0 = core
-        plan = RT.make_plan(dest, 2, cap)
-        compact = RT.scatter_to_buckets(outputs, plan, 2, cap)[0]   # [C, ...]
-        c_out, c_feats = stage.fn(stage.params, compact)
-        pad_out = jnp.zeros((2, cap) + c_out.shape[1:], c_out.dtype) \
-            .at[0].set(c_out)
-        pad_feats = jnp.zeros((2, cap) + c_feats.shape[1:], c_feats.dtype) \
-            .at[0].set(c_feats)
-        full_out = RT.gather_from_buckets(pad_out, plan)
-        full_feats = RT.gather_from_buckets(pad_feats, plan)
-        return full_out, full_feats, plan.keep
+        return RT.compact_apply(
+            functools.partial(stage.fn, stage.params), outputs, live, cap)
 
     def run(self, batch: jnp.ndarray,
             live: jnp.ndarray | None = None) -> PipelineResult:
@@ -104,15 +184,22 @@ class DataDrivenPipeline:
         (False) pass through untouched: no stage outputs committed, no
         rules evaluated, no escalation, and they never consume core
         capacity."""
+        # the edge prefix is exactly run_edge (one copy of the gating
+        # logic — the fleet runs the same prefix per shard); this loop
+        # only adds the core leg with its capacity compaction
+        partial, live = self.run_edge(batch, live)
+        ci = self.core_index
+        if ci is None:
+            return partial
         n = batch.shape[0]
-        live = jnp.ones((n,), bool) if live is None else live.astype(bool)
-        escalated = jnp.zeros((n,), bool)
-        stored = jnp.zeros((n,), bool)
-        dropped = jnp.zeros((n,), bool)
-        consequence = jnp.zeros((n,), jnp.int32)
-        outputs = batch
-        feats_all = []
-        for i, stage in enumerate(self.stages):
+        # a core-first pipeline enters its core stage without a rule
+        # transition, so nothing counts as escalated yet
+        escalated = partial.escalated if ci else jnp.zeros((n,), bool)
+        stored, dropped = partial.stored, partial.dropped
+        consequence, outputs = partial.consequence, partial.outputs
+        feats_all = list(partial.stage_features)
+        for i in range(ci, len(self.stages)):
+            stage = self.stages[i]
             new_out, feats, processed = self._apply_stage(stage, outputs, live)
             feats_all.append(feats)
             # commit outputs only for live, actually-processed items

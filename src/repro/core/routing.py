@@ -112,6 +112,105 @@ def route_and_deliver(payload: jnp.ndarray, idx: jnp.ndarray,
     return recv, recv_counts.reshape(num_ranks)
 
 
+def compact_apply(fn, items: jnp.ndarray, keep: jnp.ndarray,
+                  capacity: int) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """Run ``fn`` on the ``keep`` subset of a fixed-shape batch,
+    compacted to ``capacity`` slots (first-come-first-kept).
+
+    This is the capacity-bounded tier in one place: the pipeline's
+    core stage (``core_capacity``) and the fleet's budgeted core
+    sub-mesh both use it.  fn: [C, ...] -> ([C, ...], [C, F]).
+    Returns (outputs, features, processed) at full batch shape —
+    ``processed`` marks items that got a slot; shed items return
+    zeros, and the caller keeps their previous results.
+    """
+    keep = keep.astype(bool)
+    dest = jnp.where(keep, 0, 1).astype(jnp.int32)   # bucket 0 = compute
+    plan = make_plan(dest, 2, capacity)
+    compact = scatter_to_buckets(items, plan, 2, capacity)[0]  # [C, ...]
+    out_c, feats_c = fn(compact)
+    pad_out = jnp.zeros((2, capacity) + out_c.shape[1:], out_c.dtype) \
+        .at[0].set(out_c)
+    pad_feats = jnp.zeros((2, capacity) + feats_c.shape[1:],
+                          feats_c.dtype).at[0].set(feats_c)
+    return (gather_from_buckets(pad_out, plan),
+            gather_from_buckets(pad_feats, plan), plan.keep & keep)
+
+
+# ---------------------------------------------------------------------------
+# Fleet escalation routing (variable per-shard counts under a fixed cap)
+# ---------------------------------------------------------------------------
+
+def escalation_plan(escalate: jnp.ndarray, offset: jnp.ndarray,
+                    num_ranks: int, num_core: int,
+                    capacity: int) -> tuple[DispatchPlan, jnp.ndarray]:
+    """Route-plan for rule-escalated items from one shard to a core
+    sub-mesh (ranks ``0 .. num_core-1`` of an ``num_ranks``-wide axis).
+
+    Each shard escalates a *variable* number of its ``N`` items, but the
+    exchange buffers are fixed shape: every escalated item gets a
+    *global slot* ``g = offset + (index among this shard's escalated
+    items)`` — ``offset`` is the exclusive prefix sum of escalation
+    counts over lower-ranked shards (the caller all_gathers the counts)
+    — and goes to core rank ``g % num_core``.  Consecutive slots fan
+    out round-robin, so one source never sends more than
+    ``ceil(N / num_core)`` items to one destination: that is the fixed
+    per-(src, dest) ``capacity`` that makes the all-to-all buffer
+    static.  Slot order is shard-major, so "first ``budget`` global
+    slots" is a deterministic fleet-wide tiebreak.
+
+    escalate: [N] bool; offset: [] int32 global slot of this shard's
+    first escalated item.  Returns (plan over ``num_ranks + 1``
+    buckets — the last is the shed bucket holding the non-escalated
+    items, none of which are kept — and [N] int32 global slots,
+    meaningless where ``~escalate``).  Callers scatter with
+    ``num_ranks + 1`` destinations and slice the shed row off the
+    send buffer.
+    """
+    esc = escalate.astype(bool)
+    e32 = esc.astype(jnp.int32)
+    local = jnp.cumsum(e32) - e32                  # exclusive prefix
+    g = jnp.asarray(offset, jnp.int32) + local     # [N] global slot
+    dest = jnp.where(esc, g % num_core, num_ranks).astype(jnp.int32)
+    plan = make_plan(dest, num_ranks + 1, capacity)
+    return plan._replace(keep=plan.keep & esc,
+                         overflow=plan.overflow[:num_ranks],
+                         counts=plan.counts[:num_ranks]), g
+
+
+def escalation_recv_slots(counts: jnp.ndarray, rank: jnp.ndarray,
+                          num_core: int, capacity: int, budget: int
+                          ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Receive-side dual of :func:`escalation_plan`: which slots of the
+    post-all-to-all ``[num_ranks, capacity, ...]`` buffer hold real
+    records, and which fall under the fleet core budget.
+
+    No flag channel rides the wire: validity is *derived* from the
+    all_gathered per-shard escalation counts.  Source ``s`` holds
+    global slots ``[offset_s, offset_s + counts_s)``; the subsequence
+    destined to ``rank`` is the arithmetic progression ``g(s, k) =
+    offset_s + ((rank - offset_s) mod num_core) + k * num_core``, laid
+    out in send-slot order — so slot validity and the budget test are
+    pure index arithmetic.  The budget is *fleet-level*: the first
+    ``budget`` global slots (shard-major order) are processed,
+    wherever they land.
+
+    counts: [num_ranks] int32 per-shard escalation counts; rank: []
+    this device's mesh rank.  Returns ([num_ranks, capacity] bool slot
+    occupancy under budget, [num_ranks, capacity] bool raw occupancy,
+    [num_ranks, capacity] int32 global slots).
+    """
+    num_ranks = counts.shape[0]
+    offsets = jnp.cumsum(counts) - counts          # exclusive prefix
+    first = (jnp.asarray(rank, jnp.int32) - offsets) % num_core
+    sent = jnp.maximum(0, -(-(counts - first) // num_core))  # ceil
+    k = jnp.arange(capacity, dtype=jnp.int32)
+    g = (offsets + first)[:, None] + k[None, :] * num_core
+    occupied = (k[None, :] < sent[:, None]) & (rank < num_core)
+    return occupied & (g < budget), occupied, g
+
+
 def rank_of_message(profile_batch: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """Convenience: encoded profiles [N, 128] -> owner ranks [N]."""
     idx = sfc.profile_index(profile_batch)

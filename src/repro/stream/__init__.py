@@ -1,5 +1,6 @@
 from repro.stream.windows import (  # noqa: F401
     apply_watermark,
+    session_window,
     sliding_window,
     tumbling_window,
     window_feature_names,
@@ -11,3 +12,6 @@ from repro.stream.executor import (  # noqa: F401
     StreamMetrics,
     StreamState,
 )
+
+# the fleet layer (repro.stream.fleet) is imported lazily by its users:
+# it pulls in shard_map machinery that single-device paths don't need

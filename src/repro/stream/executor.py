@@ -88,6 +88,14 @@ class StreamMetrics(NamedTuple):
     windows_dropped: jnp.ndarray   # quality-dropped
     core_overflow: jnp.ndarray     # flagged beyond core_capacity
 
+    def as_dict(self) -> dict[str, int | list[int]]:
+        """Host-side snapshot: one ``jax.device_get`` for the whole
+        tuple (a single transfer, not one sync per counter), plain
+        ints.  Per-shard [E] counters come back as lists of ints."""
+        host = jax.device_get(self)
+        return {k: v.tolist() if getattr(v, "ndim", 0) else int(v)
+                for k, v in zip(self._fields, host)}
+
 
 def _zero_metrics() -> StreamMetrics:
     # distinct buffers per counter: the step donates its state, and XLA
@@ -111,6 +119,104 @@ class StepOutput(NamedTuple):
     consequence: jnp.ndarray       # [NW] rule consequence codes
     escalated: jnp.ndarray         # [NW] bool reached the core tier
     outputs: jnp.ndarray           # [NW, ...] pipeline outputs
+
+
+class IngestResult(NamedTuple):
+    """Front half of a stream step (ingest -> watermark -> windows ->
+    rules), shared verbatim by the single-device and fleet executors so
+    a fleet shard is *provably* the same machine as a lone device up to
+    the escalation boundary."""
+    rb: rbuf.RingBuffer
+    carry: jnp.ndarray
+    carry_valid: jnp.ndarray
+    max_ts: jnp.ndarray
+    aggregates: jnp.ndarray        # [NW, D]
+    window_count: jnp.ndarray      # [NW]
+    features: jnp.ndarray          # [NW, 5]
+    consequence: jnp.ndarray       # [NW] engine codes (emit-masked)
+    emit: jnp.ndarray              # [NW] bool count >= min_count
+    record: jnp.ndarray            # [NW, 5 + D] features ++ aggregate
+    n_in: jnp.ndarray
+    n_accepted: jnp.ndarray
+    n_dequeued: jnp.ndarray
+    n_late: jnp.ndarray
+
+
+def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
+                      state: StreamState, items: jnp.ndarray,
+                      ts: jnp.ndarray,
+                      watermark_ts: jnp.ndarray | None = None
+                      ) -> IngestResult:
+    """enqueue -> dequeue -> watermark -> carry-continuous windows ->
+    rule features, as one fixed-shape pure function.
+
+    ``watermark_ts``: reference max event time for the late test.
+    Defaults to this stream's own ``state.max_ts``; a fleet passes the
+    *fleet-wide minimum* of per-shard maxima so lagging shards hold
+    back window close everywhere.  The shard's own running max still
+    only ever advances (a laggy fleet watermark never rolls it back).
+    """
+    n_in = items.shape[0]
+    rows_in = jnp.concatenate(
+        [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
+        axis=1)
+    rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+
+    rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
+    wm = state.max_ts if watermark_ts is None else watermark_ts
+    valid, n_late, max_ts = W.apply_watermark(
+        rows[:, 0], valid, wm, cfg.lateness)
+    max_ts = jnp.maximum(state.max_ts, max_ts)
+
+    # cross-batch continuity: prepend the carried W-S samples
+    seq = jnp.concatenate([state.carry, rows], axis=0)
+    seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
+    sig = seq[:, 1:]
+    agg, wcount = W.sliding_window(
+        sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
+        backend=cfg.backend, partial=False, interpret=cfg.interpret)
+    feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
+                                 partial=False)
+
+    emit = wcount >= cfg.min_count
+    _, cons = engine.evaluate(feats)
+    cons = jnp.where(emit, cons, R.C_NONE)
+    record = jnp.concatenate([feats, agg], axis=1)         # [NW, 5 + D]
+    return IngestResult(
+        rb=rb,
+        carry=seq[seq.shape[0] - cfg.carry_len:]
+        if cfg.carry_len else seq[:0],
+        carry_valid=seq_valid[seq_valid.shape[0] - cfg.carry_len:]
+        if cfg.carry_len else seq_valid[:0],
+        max_ts=max_ts, aggregates=agg, window_count=wcount, features=feats,
+        consequence=cons, emit=emit, record=record,
+        n_in=jnp.int32(n_in), n_accepted=n_acc,
+        n_dequeued=jnp.sum(valid.astype(jnp.int32)) + n_late,
+        n_late=n_late)
+
+
+def advance_metrics(m: StreamMetrics, ing: IngestResult,
+                    n_escalated: jnp.ndarray, n_stored: jnp.ndarray,
+                    n_dropped: jnp.ndarray,
+                    overflow: jnp.ndarray) -> StreamMetrics:
+    """One step's worth of counter increments (shared fleet/single)."""
+    one = jnp.int32(1)
+    return StreamMetrics(
+        steps=m.steps + one,
+        items_offered=m.items_offered + ing.n_in,
+        items_accepted=m.items_accepted + ing.n_accepted,
+        items_rejected=m.items_rejected + (ing.n_in - ing.n_accepted),
+        items_dequeued=m.items_dequeued + ing.n_dequeued,
+        items_late=m.items_late + ing.n_late,
+        windows_emitted=m.windows_emitted
+        + jnp.sum(ing.emit.astype(jnp.int32)),
+        rules_fired=m.rules_fired
+        + jnp.sum((ing.consequence != R.C_NONE).astype(jnp.int32)),
+        windows_escalated=m.windows_escalated + n_escalated,
+        windows_stored=m.windows_stored + n_stored,
+        windows_dropped=m.windows_dropped + n_dropped,
+        core_overflow=m.core_overflow + overflow,
+    )
 
 
 class StreamExecutor:
@@ -153,72 +259,28 @@ class StreamExecutor:
         # the Python body runs exactly once per jit trace, so this
         # counts (re)traces without reaching into jit internals
         self._traces += 1
-        cfg, m = self.cfg, state.metrics
-        n_in = items.shape[0]
-        rows_in = jnp.concatenate(
-            [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
-            axis=1)
-        rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+        ing = ingest_and_window(self.cfg, self.engine, state, items, ts)
 
-        rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
-        valid, n_late, max_ts = W.apply_watermark(
-            rows[:, 0], valid, state.max_ts, cfg.lateness)
-
-        # cross-batch continuity: prepend the carried W-S samples
-        seq = jnp.concatenate([state.carry, rows], axis=0)
-        seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
-        sig = seq[:, 1:]
-        agg, wcount = W.sliding_window(
-            sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
-            backend=cfg.backend, partial=False, interpret=cfg.interpret)
-        feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
-                                     partial=False)
-
-        emit = wcount >= cfg.min_count
-        _, cons = self.engine.evaluate(feats)
-        cons = jnp.where(emit, cons, R.C_NONE)
-
-        record = jnp.concatenate([feats, agg], axis=1)     # [NW, 5 + D]
         # non-emitted windows (count < min_count) enter the pipeline
         # dead: no rules, no escalation, no core-capacity consumption
-        result = self.pipeline.run(record, live=emit)
+        result = self.pipeline.run(ing.record, live=ing.emit)
         escalated = result.escalated
         n_esc = jnp.sum(escalated.astype(jnp.int32))
         cap = self.pipeline.core_capacity
         overflow = jnp.maximum(0, n_esc - cap) if cap is not None \
             else jnp.zeros((), jnp.int32)
 
-        one = jnp.int32(1)
-        metrics = StreamMetrics(
-            steps=m.steps + one,
-            items_offered=m.items_offered + n_in,
-            items_accepted=m.items_accepted + n_acc,
-            items_rejected=m.items_rejected + (n_in - n_acc),
-            items_dequeued=m.items_dequeued
-            + jnp.sum(valid.astype(jnp.int32)) + n_late,
-            items_late=m.items_late + n_late,
-            windows_emitted=m.windows_emitted
-            + jnp.sum(emit.astype(jnp.int32)),
-            rules_fired=m.rules_fired
-            + jnp.sum((cons != R.C_NONE).astype(jnp.int32)),
-            windows_escalated=m.windows_escalated + n_esc,
-            windows_stored=m.windows_stored
-            + jnp.sum(result.stored.astype(jnp.int32)),
-            windows_dropped=m.windows_dropped
-            + jnp.sum(result.dropped.astype(jnp.int32)),
-            core_overflow=m.core_overflow + overflow,
-        )
+        metrics = advance_metrics(
+            state.metrics, ing, n_esc,
+            jnp.sum(result.stored.astype(jnp.int32)),
+            jnp.sum(result.dropped.astype(jnp.int32)), overflow)
         new_state = StreamState(
-            rb=rb,
-            carry=seq[seq.shape[0] - cfg.carry_len:]
-            if cfg.carry_len else seq[:0],
-            carry_valid=seq_valid[seq_valid.shape[0] - cfg.carry_len:]
-            if cfg.carry_len else seq_valid[:0],
-            max_ts=max_ts,
-            metrics=metrics,
+            rb=ing.rb, carry=ing.carry, carry_valid=ing.carry_valid,
+            max_ts=ing.max_ts, metrics=metrics,
         )
-        return new_state, StepOutput(agg, feats, wcount, cons, escalated,
-                                     result.outputs)
+        return new_state, StepOutput(ing.aggregates, ing.features,
+                                     ing.window_count, ing.consequence,
+                                     escalated, result.outputs)
 
     # -- public API ---------------------------------------------------------
     def step(self, state: StreamState, items: jnp.ndarray,

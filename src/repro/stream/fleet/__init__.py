@@ -1,0 +1,12 @@
+from repro.stream.fleet.executor import (  # noqa: F401
+    FleetConfig,
+    FleetExecutor,
+    FleetMetrics,
+    FleetState,
+)
+from repro.stream.fleet.federation import (  # noqa: F401
+    FederationStats,
+    allreduce_metrics,
+    federate_escalations,
+    fleet_watermark,
+)

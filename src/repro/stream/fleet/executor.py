@@ -1,0 +1,259 @@
+"""Sharded edge-fleet stream runtime: E edge devices, one mesh, one
+traced step.
+
+``FleetExecutor`` runs E independent edge shards — each with its own
+ring buffer, window carry, and watermark — as **one** ``shard_map``
+step over an ``"edge"`` mesh axis:
+
+    per-shard:  enqueue -> dequeue -> watermark -> windows -> rules
+                -> edge pipeline stages            (no cross-talk)
+    fleet:      escalated window records -> ONE all-to-all -> core
+                sub-mesh (ranks 0..num_core-1) -> fleet-budgeted core
+                stage -> all-to-all scatter-back -> commit
+
+The whole tick compiles to a single XLA executable (``trace_count``
+stays 1 after warmup, same discipline as ``StreamExecutor``): per-shard
+work is the *same code* as the single-device executor
+(``ingest_and_window``), so a fleet of E shards is bit-identical to E
+lone devices except where the fleet semantics intentionally differ —
+
+* the watermark reference is the fleet-wide **min** of per-shard max
+  event times (a lagging shard holds back lateness-dropping on every
+  shard), and
+* core capacity is a **fleet-level budget**: the first ``core_budget``
+  escalated windows per step (deterministic shard-major order) get core
+  compute wherever they came from; the rest keep their edge results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import rules as R
+from repro.core.pipeline import DataDrivenPipeline
+from repro.data import ringbuffer as rbuf
+from repro.stream.executor import (StepOutput, StreamConfig, StreamMetrics,
+                                   StreamState, _zero_metrics,
+                                   advance_metrics, ingest_and_window)
+from repro.stream.fleet import federation as F
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet topology + budget knobs (all static: part of the single
+    trace, like ``StreamConfig``)."""
+    stream: StreamConfig           # per-shard stream config
+    num_shards: int                # E devices on the "edge" mesh axis
+    num_core: int = 1              # core sub-mesh = ranks 0..num_core-1
+    core_budget: int = 8           # fleet-level escalations / step
+    axis_name: str = "edge"
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {self.num_shards}")
+        if not (1 <= self.num_core <= self.num_shards):
+            raise ValueError("need 1 <= num_core <= num_shards, got "
+                             f"{self.num_core} / {self.num_shards}")
+        if self.core_budget < 0:
+            raise ValueError(f"core_budget must be >= 0, got {self}")
+
+    @property
+    def route_capacity(self) -> int:
+        """Per-(src, dest) slot count of the all-to-all buffer.  Global
+        slots fan out round-robin over the core sub-mesh, so one shard
+        never sends more than ceil(NW / num_core) records to one core
+        rank — no send-side shed, ever."""
+        return -(-self.stream.windows_per_step // self.num_core)
+
+
+class FleetMetrics(NamedTuple):
+    """Per-shard stream counters + all-reduced fleet counters +
+    escalation-exchange counters.  In the global (host) view, ``shard``
+    leaves are [E] arrays; ``fleet`` leaves are [E] replicated."""
+    shard: StreamMetrics            # this shard's local counters
+    fleet: StreamMetrics            # psum over the edge axis
+    escalations_sent: jnp.ndarray   # records this shard routed out
+    core_received: jnp.ndarray      # records landed here as core rank
+    core_processed: jnp.ndarray     # of those, got core compute
+    fleet_core_overflow: jnp.ndarray  # fleet windows beyond budget
+
+    def as_dict(self) -> dict:
+        """Host-side snapshot: a single ``jax.device_get`` for the
+        whole tree.  Per-shard counters come back as lists (one int per
+        shard); fleet counters as plain ints."""
+        host = jax.device_get(self)
+
+        def _shard(v):
+            return v.tolist() if getattr(v, "ndim", 0) else int(v)
+
+        def _fleet(v):
+            return int(np.asarray(v).reshape(-1)[0])
+
+        return {
+            "shard": {k: _shard(v) for k, v in
+                      zip(StreamMetrics._fields, host.shard)},
+            "fleet": {k: _fleet(v) for k, v in
+                      zip(StreamMetrics._fields, host.fleet)},
+            "escalations_sent": _shard(host.escalations_sent),
+            "core_received": _shard(host.core_received),
+            "core_processed": _shard(host.core_processed),
+            "fleet_core_overflow": _fleet(host.fleet_core_overflow),
+        }
+
+
+class FleetState(NamedTuple):
+    """Global fleet state: every leaf carries a leading [E] shard axis
+    (sharded over the mesh; ``shard_map`` hands each device its row)."""
+    shard: StreamState              # per-shard rb/carry/watermark/metrics
+    fleet: StreamMetrics            # all-reduced counters (replicated)
+    escalations_sent: jnp.ndarray
+    core_received: jnp.ndarray
+    core_processed: jnp.ndarray
+    fleet_core_overflow: jnp.ndarray
+
+    @property
+    def metrics(self) -> FleetMetrics:
+        return FleetMetrics(self.shard.metrics, self.fleet,
+                            self.escalations_sent, self.core_received,
+                            self.core_processed, self.fleet_core_overflow)
+
+
+class FleetExecutor:
+    """E sharded stream executors + core escalation, one XLA executable.
+
+    engine/pipeline: same contract as ``StreamExecutor``; the pipeline
+    must end in a single core-placement stage (the canonical two-tier
+    shape) — its edge prefix runs per shard, its core stage runs on the
+    core sub-mesh over gathered records.  The pipeline's per-device
+    ``core_capacity`` is ignored here: ``cfg.core_budget`` is the
+    fleet-level replacement.
+    """
+
+    def __init__(self, cfg: FleetConfig, engine: R.RuleEngine,
+                 pipeline: DataDrivenPipeline, mesh: Mesh | None = None):
+        ci = pipeline.core_index
+        if ci is None or ci != len(pipeline.stages) - 1:
+            raise ValueError("fleet pipeline needs exactly one core stage, "
+                             "as the last stage")
+        self.cfg = cfg
+        self.engine = engine
+        self.pipeline = pipeline
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < cfg.num_shards:
+                raise ValueError(f"need {cfg.num_shards} devices for the "
+                                 f"edge axis, have {len(devs)}")
+            mesh = Mesh(np.asarray(devs[:cfg.num_shards]), (cfg.axis_name,))
+        if mesh.shape[cfg.axis_name] != cfg.num_shards:
+            raise ValueError(f"mesh axis {cfg.axis_name!r} has "
+                             f"{mesh.shape[cfg.axis_name]} devices, config "
+                             f"says {cfg.num_shards}")
+        self.mesh = mesh
+        self._traces = 0
+        spec = P(cfg.axis_name)
+        sharded = shard_map(self._fleet_step, mesh=mesh,
+                            in_specs=(spec, spec, spec),
+                            out_specs=(spec, spec))
+
+        def _traced(state, items, ts):
+            # outer jit body runs once per trace (shard_map may re-trace
+            # its inner fn during lowering; don't count those)
+            self._traces += 1
+            return sharded(state, items, ts)
+
+        self._jstep = jax.jit(_traced, donate_argnums=(0,))
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, feature_dim: int) -> FleetState:
+        cfg, E = self.cfg.stream, self.cfg.num_shards
+
+        def tile(x):
+            return jnp.tile(x[None], (E,) + (1,) * x.ndim)
+
+        shard = StreamState(
+            rb=rbuf.create(cfg.capacity, (1 + feature_dim,)),
+            carry=jnp.zeros((cfg.carry_len, 1 + feature_dim), jnp.float32),
+            carry_valid=jnp.zeros((cfg.carry_len,), bool),
+            max_ts=jnp.asarray(jnp.finfo(jnp.float32).min),
+            metrics=_zero_metrics(),
+        )
+        # distinct buffers per counter: the step donates its state, and
+        # XLA rejects donating one aliased buffer through several args
+        def zero():
+            return jnp.zeros((E,), jnp.int32)
+
+        return FleetState(
+            shard=jax.tree.map(tile, shard),
+            fleet=StreamMetrics(*(zero() for _ in StreamMetrics._fields)),
+            escalations_sent=zero(), core_received=zero(),
+            core_processed=zero(), fleet_core_overflow=zero(),
+        )
+
+    @property
+    def trace_count(self) -> int:
+        """Number of fleet-step traces so far — 1 after warmup."""
+        return self._traces
+
+    # -- the single-trace fleet tick ---------------------------------------
+    def _fleet_step(self, state: FleetState, items: jnp.ndarray,
+                    ts: jnp.ndarray) -> tuple[FleetState, StepOutput]:
+        cfg = self.cfg
+        s = jax.tree.map(lambda x: x[0], state)        # this shard's block
+
+        # fleet watermark: min of per-shard maxima (as of the previous
+        # step) — a lagging shard holds back lateness fleet-wide
+        wm = F.fleet_watermark(s.shard.max_ts, cfg.axis_name)
+        ing = ingest_and_window(cfg.stream, self.engine, s.shard,
+                                items[0], ts[0], watermark_ts=wm)
+
+        # edge pipeline stages + rule gating, purely local
+        partial, core_live = self.pipeline.run_edge(ing.record,
+                                                    live=ing.emit)
+
+        # escalation: one all-to-all out, fleet-budgeted core stage,
+        # one all-to-all back
+        core_out, core_feats, processed, stats = F.federate_escalations(
+            partial.outputs, core_live, self.pipeline.run_core,
+            axis_name=cfg.axis_name, num_shards=cfg.num_shards,
+            num_core=cfg.num_core, core_budget=cfg.core_budget,
+            capacity=cfg.route_capacity)
+        result = self.pipeline.commit_core(partial, core_live, core_out,
+                                           core_feats, processed)
+
+        n_esc = jnp.sum(core_live.astype(jnp.int32))
+        overflow = jnp.sum((core_live & ~processed).astype(jnp.int32))
+        metrics = advance_metrics(
+            s.shard.metrics, ing, n_esc,
+            jnp.sum(result.stored.astype(jnp.int32)),
+            jnp.sum(result.dropped.astype(jnp.int32)), overflow)
+        new_shard = StreamState(rb=ing.rb, carry=ing.carry,
+                                carry_valid=ing.carry_valid,
+                                max_ts=ing.max_ts, metrics=metrics)
+        new_state = FleetState(
+            shard=new_shard,
+            fleet=F.allreduce_metrics(metrics, cfg.axis_name),
+            escalations_sent=s.escalations_sent + stats.escalations_sent,
+            core_received=s.core_received + stats.core_received,
+            core_processed=s.core_processed + stats.core_processed,
+            fleet_core_overflow=s.fleet_core_overflow
+            + stats.fleet_overflow,
+        )
+        out = StepOutput(ing.aggregates, ing.features, ing.window_count,
+                         ing.consequence, result.escalated, result.outputs)
+        expand = lambda t: jax.tree.map(lambda x: x[None], t)  # noqa: E731
+        return expand(new_state), expand(out)
+
+    # -- public API ---------------------------------------------------------
+    def step(self, state: FleetState, items: jnp.ndarray,
+             ts: jnp.ndarray) -> tuple[FleetState, StepOutput]:
+        """One fleet tick: offer ``items [E, N, D]`` with event
+        timestamps ``ts [E, N]`` (one producer batch per shard),
+        consume one window batch per shard.  Returned ``StepOutput``
+        leaves carry a leading [E] shard axis."""
+        return self._jstep(state, items, ts)

@@ -1,0 +1,125 @@
+"""Cross-shard federation primitives for the edge fleet (run under
+``shard_map`` on the ``"edge"`` mesh axis).
+
+Three fleet-wide agreements turn E independent edge shards into one
+system:
+
+* **Watermark**: the fleet watermark is the *minimum* of the per-shard
+  running max event times (the stream-SQL rule: a window may only
+  close once *every* shard has seen past it, so a lagging shard holds
+  back lateness-dropping fleet-wide).
+* **Escalation routing**: every rule-escalated window record gets a
+  deterministic *global slot* (shard-major order, via one all_gather
+  of per-shard counts) and rides a **single all-to-all** to core rank
+  ``slot % num_core`` — the paper's multi-hop post() as one collective,
+  same machinery as ``core.routing`` MoE dispatch.
+* **Core budget**: the core sub-mesh processes the first
+  ``core_budget`` global slots per step, *fleet-level*, enforced after
+  the all-to-all from the same all_gathered counts (no flag channel on
+  the wire).  Overflow windows keep their edge results — the paper's
+  graceful-degradation trade, now a fleet-wide budget instead of a
+  per-device capacity.
+
+Everything here is a pure fixed-shape function: the whole fleet tick
+(per-shard ingest -> windows -> rules, federation, core processing,
+result scatter-back) stays inside one jit trace / one XLA executable.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing as RT
+
+
+def fleet_watermark(max_ts: jnp.ndarray, axis_name) -> jnp.ndarray:
+    """Fleet watermark = min over shards of the per-shard max event
+    time.  Lagging shards hold back window close everywhere."""
+    return jax.lax.pmin(max_ts, axis_name)
+
+
+class FederationStats(NamedTuple):
+    """Per-step escalation-exchange counters (int32 scalars)."""
+    escalations_sent: jnp.ndarray   # this shard's records routed out
+    core_received: jnp.ndarray      # records landing on this core rank
+    core_processed: jnp.ndarray     # of those, under the fleet budget
+    fleet_escalations: jnp.ndarray  # fleet total this step (replicated)
+    fleet_overflow: jnp.ndarray     # fleet total beyond budget (replicated)
+
+
+def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
+                         run_core: Callable, *, axis_name,
+                         num_shards: int, num_core: int, core_budget: int,
+                         capacity: int
+                         ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                    FederationStats]:
+    """Route escalated records to the core sub-mesh, process under the
+    fleet budget, scatter results back — one all-to-all each way.
+
+    records: [N, R] this shard's window records (edge-stage outputs);
+    escalate: [N] bool; run_core: compact [C, R] -> ([C, R] outputs,
+    [C, F] features) — the pipeline's core stage.  ``capacity`` is the
+    per-(src, dest) slot count of the exchange buffer (>=
+    ceil(N / num_core) guarantees no send-side shed).
+
+    Returns ([N, R] core outputs, [N, F] core features, [N] bool
+    processed, stats).  ``processed`` marks the records that actually
+    got core compute; the rest keep their edge results.
+    """
+    n, r = records.shape
+    esc = escalate.astype(bool)
+    my_count = jnp.sum(esc.astype(jnp.int32))
+    # one tiny all_gather of counts gives every shard the full global
+    # slot layout: send plan, receive validity, and the budget test are
+    # all pure index arithmetic from here on
+    counts = jax.lax.all_gather(my_count, axis_name)       # [E]
+    ridx = jax.lax.axis_index(axis_name).astype(jnp.int32)
+    offset = jnp.sum(jnp.where(jnp.arange(num_shards) < ridx, counts, 0))
+    plan, g = RT.escalation_plan(esc, offset, num_shards, num_core, capacity)
+
+    # bucket num_shards is the plan's shed row (non-escalated items);
+    # it never rides the wire
+    send = RT.scatter_to_buckets(records, plan, num_shards + 1,
+                                 capacity)[:num_shards]
+    recv = RT.all_to_all_route(send, axis_name)            # [E, cap, R]
+
+    under, occupied, _ = RT.escalation_recv_slots(
+        counts, ridx, num_core, capacity, core_budget)
+    # compact the under-budget records: flat (src, slot) order is
+    # ascending global slot, so "first core_budget fleet-wide" is
+    # exactly what survives, deterministically
+    c_core = max(1, -(-core_budget // num_core))
+    full_out, full_feats, done_mask = RT.compact_apply(
+        run_core, recv.reshape(num_shards * capacity, r),
+        under.reshape(-1), c_core)
+    f = full_feats.shape[1]
+    done = done_mask.astype(records.dtype)
+
+    payload = jnp.concatenate(
+        [full_out, full_feats, done[:, None]],
+        axis=1).reshape(num_shards, capacity, r + f + 1)
+    back = RT.all_to_all_route(payload, axis_name)         # [E, cap, R+F+1]
+    resp = RT.gather_from_buckets(back, plan)              # [N, R+F+1]
+    core_out = resp[:, :r]
+    core_feats = resp[:, r:r + f]
+    processed = (resp[:, -1] > 0.5) & plan.keep
+
+    total = jnp.sum(counts)
+    stats = FederationStats(
+        escalations_sent=my_count,
+        core_received=jnp.sum(occupied.astype(jnp.int32)),
+        core_processed=jnp.sum(done_mask.astype(jnp.int32)),
+        fleet_escalations=total,
+        fleet_overflow=jnp.maximum(0, total - core_budget),
+    )
+    return core_out, core_feats, processed, stats
+
+
+def allreduce_metrics(metrics, axis_name):
+    """All-reduce a NamedTuple of scalar counters over the fleet axis
+    (one stacked psum, not one collective per counter)."""
+    vec = jnp.stack(list(metrics))
+    tot = jax.lax.psum(vec, axis_name)
+    return type(metrics)(*(tot[i] for i in range(len(metrics))))

@@ -76,6 +76,17 @@ def _frame(x: jnp.ndarray, valid: jnp.ndarray, window: int, stride: int,
     return xp[idx], vp[idx]
 
 
+def _seq_combine(masked: jnp.ndarray, combine) -> jnp.ndarray:
+    """Reduce [N, W, D] over axis 1 by *sequential* left-to-right
+    accumulation — the same op order as the Pallas kernel's W-step
+    row sweep, so the jnp oracle and ``backend="pallas"`` agree
+    bit-for-bit, not just to tolerance."""
+    acc = masked[:, 0]
+    for w in range(1, masked.shape[1]):
+        acc = combine(acc, masked[:, w])
+    return acc
+
+
 def _masked_reduce(vals: jnp.ndarray, mask: jnp.ndarray,
                    reducer: Reducer) -> jnp.ndarray:
     """vals [N, W, D], mask [N, W] -> [N, D].  Empty windows reduce to 0."""
@@ -86,15 +97,15 @@ def _masked_reduce(vals: jnp.ndarray, mask: jnp.ndarray,
     if reducer == "count":
         return jnp.broadcast_to(count, vals.shape[::2])
     if reducer == "sum":
-        return jnp.sum(jnp.where(m, vals, 0), axis=1)
+        return _seq_combine(jnp.where(m, vals, 0), jnp.add)
     if reducer == "mean":
-        s = jnp.sum(jnp.where(m, vals, 0), axis=1)
+        s = _seq_combine(jnp.where(m, vals, 0), jnp.add)
         return s / jnp.maximum(count, 1)
     if reducer in ("max", "min"):
         fill = jnp.finfo(vals.dtype).min if reducer == "max" \
             else jnp.finfo(vals.dtype).max
-        op = jnp.max if reducer == "max" else jnp.min
-        r = op(jnp.where(m, vals, fill), axis=1)
+        op = jnp.maximum if reducer == "max" else jnp.minimum
+        r = _seq_combine(jnp.where(m, vals, fill), op)
         return jnp.where(count > 0, r, 0)       # empty window -> 0, not +-inf
     raise ValueError(f"unknown reducer {reducer!r}")
 
@@ -166,6 +177,63 @@ def window_features(x: jnp.ndarray, valid: jnp.ndarray, window: int,
     feats = jnp.concatenate([s / cf, mx, mn, s,
                              count.astype(x.dtype)[:, None]], axis=-1)
     return feats, count
+
+
+@functools.partial(jax.jit, static_argnames=("reducer",))
+def session_window(x: jnp.ndarray, valid: jnp.ndarray, ts: jnp.ndarray,
+                   gap: jnp.ndarray | float, *, reducer: Reducer = "mean"
+                   ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gap-based session windows (a session closes after ``gap`` event-time
+    units with no samples) on the fixed-shape machinery.
+
+    x: [T, D]; valid: [T] bool; ts: [T] event timestamps; gap: allowed
+    intra-session silence.  Samples are ordered by event time (invalid
+    rows sort last and join no session); a new session starts wherever
+    the time since the previous valid sample exceeds ``gap``.  Since a
+    block of T samples holds at most T sessions, the output is fixed
+    shape: row ``k`` is the k-th session by start time.
+
+    Returns (out [T, D] reduced aggregates, count [T] int32 samples per
+    session — 0 pads past the last session, and ``closed`` [T] bool —
+    True for sessions already followed by a gap *inside this block*;
+    the final session is always open, it may still grow).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"x must be [T, D], got {x.shape}")
+    t = x.shape[0]
+    valid = valid.astype(bool)
+    fts = ts.astype(jnp.float32)
+    order = jnp.argsort(jnp.where(valid, fts, jnp.inf), stable=True)
+    xs, vs, tss = x[order], valid[order], fts[order]
+    prev = jnp.concatenate([jnp.asarray([-jnp.inf]), tss[:-1]])
+    new_sess = vs & ((tss - prev > gap) | ~jnp.concatenate(
+        [jnp.asarray([False]), vs[:-1]]))      # first valid row starts one
+    sid = jnp.cumsum(new_sess.astype(jnp.int32)) - 1
+    seg = jnp.where(vs, sid, t)                # invalid -> dropped segment
+    count = jax.ops.segment_sum(vs.astype(jnp.int32), seg, num_segments=t)
+    if callable(reducer):
+        # sessions are variable-membership: expose them as [T, T] mask
+        member = (seg[None, :] == jnp.arange(t)[:, None]) & vs[None, :]
+        out = reducer(jnp.broadcast_to(xs[None], (t,) + xs.shape), member)
+    elif reducer == "count":
+        out = jnp.broadcast_to(count.astype(x.dtype)[:, None],
+                               (t, x.shape[1]))
+    elif reducer in ("sum", "mean"):
+        out = jax.ops.segment_sum(jnp.where(vs[:, None], xs, 0), seg,
+                                  num_segments=t)
+        if reducer == "mean":
+            out = out / jnp.maximum(count, 1)[:, None].astype(x.dtype)
+    elif reducer in ("max", "min"):
+        op = jax.ops.segment_max if reducer == "max" else jax.ops.segment_min
+        fill = jnp.finfo(x.dtype).min if reducer == "max" \
+            else jnp.finfo(x.dtype).max
+        r = op(jnp.where(vs[:, None], xs, fill), seg, num_segments=t)
+        out = jnp.where(count[:, None] > 0, r, 0)
+    else:
+        raise ValueError(f"unknown reducer {reducer!r}")
+    n_sess = jnp.sum(new_sess.astype(jnp.int32))
+    closed = jnp.arange(t, dtype=jnp.int32) < n_sess - 1
+    return out, count, closed
 
 
 @jax.jit

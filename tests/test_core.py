@@ -125,6 +125,54 @@ def test_route_local_dest_in_range():
     assert d.min() >= 0 and d.max() < 16
 
 
+def test_escalation_plan_send_recv_duality():
+    """Simulate an E-shard escalation exchange on one device: every
+    shard's escalation_plan send layout must agree slot-for-slot with
+    every receiver's analytically-derived occupancy (the fleet derives
+    recv validity from all_gathered counts, no flag channel)."""
+    rng = np.random.default_rng(3)
+    E, N, K, CAP, BUDGET = 8, 6, 3, 2, 11
+    esc = rng.random((E, N)) < 0.5
+    counts = esc.sum(1).astype(np.int32)
+    offsets = np.cumsum(counts) - counts
+    plans = []
+    for s in range(E):
+        plan, g = routing.escalation_plan(
+            jnp.asarray(esc[s]), jnp.asarray(offsets[s], jnp.int32),
+            E, K, CAP)
+        plans.append((plan, np.asarray(g)))
+        # escalated items only, destinations on the core sub-mesh,
+        # contiguous global slots
+        keep = np.asarray(plan.keep)
+        np.testing.assert_array_equal(keep, esc[s])     # cap never sheds
+        d = np.asarray(plan.dest)[keep]
+        np.testing.assert_array_equal(d, np.asarray(g)[keep] % K)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(g)[keep]),
+            offsets[s] + np.arange(counts[s]))
+    for r in range(E):
+        under, occ, g_recv = routing.escalation_recv_slots(
+            jnp.asarray(counts), jnp.asarray(r, jnp.int32), K, CAP, BUDGET)
+        occ, under, g_recv = map(np.asarray, (occ, under, g_recv))
+        for s in range(E):
+            plan, g = plans[s]
+            sent_here = (np.asarray(plan.dest) == r) & np.asarray(plan.keep)
+            # occupancy count matches what s actually put in bucket r
+            assert occ[s].sum() == sent_here.sum(), (r, s)
+            # and the receiver reconstructs the exact global slots, in
+            # the sender's slot order
+            pos = np.asarray(plan.position)[sent_here]
+            np.testing.assert_array_equal(g_recv[s][pos], g[sent_here])
+        np.testing.assert_array_equal(under, occ & (g_recv < BUDGET))
+    # fleet-wide: every global slot < BUDGET is processed exactly once
+    got = []
+    for r in range(E):
+        under, _, g_recv = map(np.asarray, routing.escalation_recv_slots(
+            jnp.asarray(counts), jnp.asarray(r, jnp.int32), K, CAP, BUDGET))
+        got.extend(g_recv[under].tolist())
+    assert sorted(got) == list(range(min(BUDGET, counts.sum())))
+
+
 # ---------------------------------------------------------------- matching
 
 def test_matching_semantics_table():

@@ -2,6 +2,7 @@
 references (incl. the Pallas window_reduce kernel), watermark policy,
 and the micro-batch executor invariants."""
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -9,7 +10,8 @@ from repro.core import pipeline as pipe
 from repro.core import rules
 from repro.kernels.window_reduce import window_reduce, window_reduce_ref
 from repro.stream import (StreamConfig, StreamExecutor, apply_watermark,
-                          sliding_window, tumbling_window, window_features)
+                          session_window, sliding_window, tumbling_window,
+                          window_features)
 
 REDUCERS = ("sum", "mean", "max", "min", "count")
 
@@ -127,6 +129,85 @@ def test_pallas_backend_equals_jnp_backend(rng):
         np.testing.assert_allclose(np.asarray(j), np.asarray(p),
                                    rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(np.asarray(jc), np.asarray(pc))
+
+
+# ---- session windows -------------------------------------------------------
+
+def _session_ref(x, valid, ts, gap, reducer="mean"):
+    """Pure-numpy session window oracle."""
+    t = x.shape[0]
+    order = np.argsort(np.where(valid, ts, np.inf), kind="stable")
+    xs, vs, tss = x[order], valid[order], ts[order]
+    sessions, cur = [], []
+    last = None
+    for i in range(t):
+        if not vs[i]:
+            continue
+        if last is not None and tss[i] - last > gap:
+            sessions.append(cur)
+            cur = []
+        cur.append(i)
+        last = tss[i]
+    if cur:
+        sessions.append(cur)
+    out = np.zeros_like(x)
+    count = np.zeros(t, np.int32)
+    closed = np.zeros(t, bool)
+    for k, idxs in enumerate(sessions):
+        vals = xs[idxs]
+        count[k] = len(idxs)
+        closed[k] = k < len(sessions) - 1
+        out[k] = {"mean": vals.mean(0), "sum": vals.sum(0),
+                  "max": vals.max(0), "min": vals.min(0),
+                  "count": np.full(x.shape[1], len(idxs))}[reducer]
+    return out, count, closed
+
+
+@pytest.mark.parametrize("reducer", REDUCERS)
+def test_session_window_matches_numpy_ref(rng, reducer):
+    t, d, gap = 40, 3, 5.0
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    v = jnp.asarray(rng.random(t) < 0.8)
+    # bursty arrivals: clusters separated by > gap silences
+    ts = np.cumsum(rng.choice([0.5, 1.0, 12.0], t, p=[0.45, 0.45, 0.1]))
+    ts = jnp.asarray(ts, jnp.float32)
+    out, count, closed = session_window(x, v, ts, gap, reducer=reducer)
+    ref_o, ref_c, ref_cl = _session_ref(np.asarray(x), np.asarray(v),
+                                        np.asarray(ts), gap, reducer)
+    np.testing.assert_allclose(np.asarray(out), ref_o, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(count), ref_c)
+    np.testing.assert_array_equal(np.asarray(closed), ref_cl)
+
+
+def test_session_window_gap_boundaries():
+    # 3 samples, gaps of exactly `gap` (same session) and > gap (new)
+    x = jnp.asarray([[1.0], [2.0], [10.0]])
+    ts = jnp.asarray([0.0, 5.0, 11.0])
+    out, count, closed = session_window(x, jnp.ones(3, bool), ts, 5.0,
+                                        reducer="sum")
+    np.testing.assert_array_equal(np.asarray(count), [2, 1, 0])
+    np.testing.assert_allclose(np.asarray(out[:2]), [[3.0], [10.0]])
+    # first session closed by the 11.0 arrival; the last stays open
+    np.testing.assert_array_equal(np.asarray(closed), [True, False, False])
+
+
+def test_session_window_unsorted_and_masked_input(rng):
+    # out-of-order delivery and invalid rows must not split sessions
+    x = jnp.asarray(rng.standard_normal((6, 2)), jnp.float32)
+    ts = jnp.asarray([3.0, 1.0, 2.0, 100.0, 101.0, 50.0])
+    v = jnp.asarray([True, True, True, True, True, False])
+    out, count, closed = session_window(x, v, ts, 2.0, reducer="count")
+    np.testing.assert_array_equal(np.asarray(count), [3, 2, 0, 0, 0, 0])
+    assert bool(closed[0]) and not bool(closed[1])
+
+
+def test_session_window_all_invalid():
+    x = jnp.ones((4, 2))
+    out, count, closed = session_window(x, jnp.zeros(4, bool),
+                                        jnp.arange(4.0), 1.0)
+    np.testing.assert_array_equal(np.asarray(count), 0)
+    np.testing.assert_array_equal(np.asarray(out), 0)
+    assert not bool(np.asarray(closed).any())
 
 
 # ---- watermark ------------------------------------------------------------
@@ -352,6 +433,78 @@ def test_executor_late_items_masked(rng):
     ts[:3] -= 1000.0                          # 3 stragglers
     state, _ = ex.step(state, items, jnp.asarray(ts))
     assert int(state.metrics.items_late) == 3
+
+
+def test_executor_pallas_backend_matches_jnp_bitwise(rng):
+    """End-to-end executor parity: a pallas-backed run (interpret mode)
+    must reproduce the jnp run bit-for-bit, step by step."""
+    runs = {}
+    for backend in ("jnp", "pallas"):
+        cfg = StreamConfig(micro_batch=32, window=16, stride=8,
+                           capacity=128, lateness=8.0, backend=backend,
+                           interpret=backend == "pallas")
+        engine = rules.RuleEngine([
+            rules.threshold_rule("hot", 0, ">=", 0.5, rules.C_SEND_CORE,
+                                 priority=1)])
+        p = pipe.two_tier_pipeline(lambda _, b: (b, b[:, :5]),
+                                   lambda _, b: (b + 100.0, b[:, :5]),
+                                   engine, core_capacity=2)
+        ex = StreamExecutor(cfg, engine, p)
+        state = ex.init_state(3)
+        feed = np.random.default_rng(3)
+        outs, t0 = [], 0.0
+        for _ in range(6):
+            items = jnp.asarray(feed.standard_normal((32, 3)), jnp.float32)
+            ts = jnp.asarray(t0 + np.arange(32), jnp.float32)
+            t0 += 32
+            state, out = ex.step(state, items, ts)
+            outs.append(jax.device_get(out))
+        assert ex.trace_count == 1
+        runs[backend] = (outs, jax.device_get(state.metrics))
+    for sj, sp in zip(*(runs[b][0] for b in ("jnp", "pallas"))):
+        for field, a, b in zip(sj._fields, sj, sp):
+            np.testing.assert_array_equal(a, b, err_msg=field)
+    for field, a, b in zip(runs["jnp"][1]._fields, *(runs[b][1] for b in
+                                                     ("jnp", "pallas"))):
+        np.testing.assert_array_equal(a, b, err_msg=field)
+
+
+def test_metrics_as_dict_snapshot(rng):
+    ex, state = _make_executor()
+    state, _, _ = _feed(ex, state, rng, 3)
+    d = state.metrics.as_dict()
+    assert set(d) == set(ex.init_state(3).metrics._fields)
+    assert all(isinstance(v, int) for v in d.values())
+    assert d["steps"] == 3 and d["items_offered"] == 96
+
+
+def test_run_edge_commit_core_equals_run(rng):
+    """The fleet's split execution path (run_edge -> core stage ->
+    commit_core) must reproduce run() exactly — this is the local
+    half of the fleet correctness oracle."""
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 0.5, rules.C_SEND_CORE,
+                             priority=2),
+        rules.threshold_rule("sparse", 4, "<", 8.0, rules.C_STORE_EDGE,
+                             priority=1),
+    ])
+    p = pipe.two_tier_pipeline(lambda _, b: (b * 2.0, b[:, :5]),
+                               lambda _, b: (b + 100.0, b[:, :5]),
+                               engine, core_capacity=None)
+    batch = jnp.asarray(rng.standard_normal((8, 7)), jnp.float32)
+    live = jnp.asarray(rng.random(8) < 0.8)
+    whole = p.run(batch, live=live)
+    partial, core_live = p.run_edge(batch, live=live)
+    c_out, c_feats = p.run_core(partial.outputs)
+    split = p.commit_core(partial, core_live, c_out, c_feats,
+                          processed=jnp.ones(8, bool))
+    np.testing.assert_array_equal(np.asarray(whole.escalated),
+                                  np.asarray(core_live))
+    for field in ("outputs", "consequence", "escalated", "stored",
+                  "dropped"):
+        np.testing.assert_allclose(np.asarray(getattr(whole, field)),
+                                   np.asarray(getattr(split, field)),
+                                   rtol=1e-6, err_msg=field)
 
 
 def test_stream_config_validation():
