@@ -7,6 +7,13 @@ p99 per-step latency, and the jit trace count (asserted == 1: the whole
 fleet tick is one XLA executable).  Emits the same CSV row schema as
 ``benchmarks/streaming.py``.
 
+``--faults`` runs the degraded-fleet smoke instead: a
+``FleetController`` drives the elastic core budget and the
+straggler-aware watermark through a scripted mid-run stall
+(``FaultSchedule``), reporting step latency under degradation, the
+budget trajectory, the ``late_excluded`` accounting, and the re-trace
+bound (``trace_count <= 1 + resizes``, asserted).
+
 The measurement runs in a subprocess: the forced host device count must
 be set before jax first initializes, and the parent harness has long
 since locked in its own platform.
@@ -22,12 +29,13 @@ WARMUP = 5
 SHARD_COUNTS = (1, 4, 8)
 
 
-def bench():
+def bench(faults: bool = False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run([sys.executable, "-m", "benchmarks.fleet",
-                          "--child"], env=env, capture_output=True,
+    args = ["--child"] + (["--faults"] if faults else [])
+    out = subprocess.run([sys.executable, "-m", "benchmarks.fleet"] + args,
+                         env=env, capture_output=True,
                          text=True, timeout=900)
     if out.returncode != 0:
         raise RuntimeError("fleet bench subprocess failed:\n"
@@ -105,8 +113,108 @@ def _child():
             f";traces={ex.trace_count}")
 
 
+def _child_faults():
+    """Degraded-fleet smoke: stall one shard mid-run under an elastic
+    budget and report what the control plane did about it."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.core import pipeline as pipe
+    from repro.core import rules
+    from repro.runtime.elastic import ElasticBudget
+    from repro.runtime.straggler import StragglerDetector
+    from repro.stream import StreamConfig
+    from repro.stream.fleet import (Fault, FaultInjector, FaultSchedule,
+                                    FleetConfig, FleetController,
+                                    FleetExecutor)
+
+    E, steps = 8, 60
+    stall = Fault(shard=2, start=20, end=32)
+    sched = FaultSchedule([stall])
+
+    def edge_fn(p, batch):
+        return batch, batch[:, :5]
+
+    def core_fn(p, batch):
+        h = batch
+        for _ in range(8):
+            h = jnp.tanh(h @ p)
+        return h, batch[:, :5]
+
+    core_p = jnp.asarray(
+        np.random.default_rng(0).standard_normal((5 + D, 5 + D)) * 0.1,
+        jnp.float32)
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot_mean", 0, ">=", 0.25,
+                             rules.C_SEND_CORE, priority=1)])
+    # tumbling windows: the stall gap cannot smear window boundaries
+    scfg = StreamConfig(micro_batch=BATCH, window=64, stride=64,
+                        capacity=4 * BATCH, lateness=64.0)
+    ex = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=4, core_budget_max=16),
+        engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine,
+                                       core_params=core_p))
+    ctl = FleetController(
+        ex,
+        budget_policy=ElasticBudget(min_budget=2, max_budget=64,
+                                    patience=2),
+        wall_detector=StragglerDetector(E, window=3, threshold=3.0,
+                                        patience=2))
+    state = ex.init_state(D)
+
+    rng = np.random.default_rng(7)
+    inj = FaultInjector(sched)
+    lat, budgets, t0 = [], [], 0.0
+    for i in range(steps):
+        base = rng.standard_normal((E, BATCH, D)).astype(np.float32)
+        if (i // 10) % 2:
+            base[:, :, 0] += 0.5           # alternating hot regime
+        ts = np.tile(t0 + np.arange(BATCH, dtype=np.float32), (E, 1))
+        t0 += BATCH
+        base, ts, offered = inj.inject(i, base, ts)
+        t = time.perf_counter()
+        state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
+                             offered=jnp.asarray(offered))
+        jax.block_until_ready(out)
+        if i >= WARMUP:
+            lat.append(time.perf_counter() - t)
+        budgets.append(ctl.tick(state,
+                                step_times=sched.stall_time(i, E)).budget)
+    # unmeasured drain: flush the stalled shard's buffered tail so the
+    # run ends with every record processed, not quietly abandoned
+    i = steps
+    while inj.pending:
+        base, ts, offered = inj.inject(
+            i, np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32), fresh=False)
+        state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
+                             offered=jnp.asarray(offered))
+        ctl.tick(state, step_times=sched.stall_time(i, E))
+        i += 1
+    lat = np.asarray(lat)
+    m = state.metrics.as_dict()
+    assert ex.trace_count <= ctl.max_trace_count <= 1 + ctl.resizes, \
+        f"trace bound broken: {ex.trace_count} > 1 + {ctl.resizes}"
+    assert sum(m["late_excluded"]) > 0, "stall never hit the catch-up path"
+    assert sum(m["shard"]["items_late"]) == 0, "catch-up dropped records"
+    row("fleet/faults_step", float(np.median(lat) * 1e6),
+        f"items_per_s={E * BATCH / np.median(lat):.0f}")
+    row("fleet/faults_p99", float(np.percentile(lat, 99) * 1e6),
+        f"budget={min(budgets)}..{max(budgets)}"
+        f";resizes={ctl.resizes}"
+        f";late_excluded={sum(m['late_excluded'])}"
+        f";esc={m['fleet']['windows_escalated']}"
+        f";overflow={m['fleet_core_overflow']}"
+        f";traces={ex.trace_count}")
+
+
 if __name__ == "__main__":
     if "--child" in sys.argv:
-        _child()
+        _child_faults() if "--faults" in sys.argv else _child()
     else:
-        bench()
+        bench(faults="--faults" in sys.argv)

@@ -19,6 +19,8 @@ SUITES = {
     "pipeline_e2e": pipeline_e2e.bench,  # paper Fig. 14
     "streaming": streaming.bench,      # continuous stream analytics
     "fleet": fleet.bench,              # sharded edge fleet, E in {1,4,8}
+    "fleet_faults":                    # degraded fleet under control plane
+        lambda: fleet.bench(faults=True),
 }
 
 

@@ -13,6 +13,15 @@ their edge results — graceful degradation, never silent loss.
 A lagging bridge (delayed uplink) also holds the fleet watermark back,
 so no shard late-drops data a slow peer might still deliver.
 
+The adaptive control plane rides on top: a ``FleetController`` grows
+the core budget while the quake escalations burst (and shrinks it
+after), and when bridge 6's uplink dies outright mid-run the
+straggler detectors exclude it from the watermark ``pmin`` — healthy
+bridges keep closing windows, the dead bridge's buffered tuples drain
+through the catch-up path on recovery (counted in ``late_excluded``,
+never dropped), and once the backlog drains within tolerance the
+bridge rejoins the ``pmin`` automatically.
+
     PYTHONPATH=src python examples/fleet_stream_analytics.py
 """
 import os
@@ -26,16 +35,21 @@ import numpy as np                          # noqa: E402
 
 from repro.core import pipeline as pipe     # noqa: E402
 from repro.core import rules                # noqa: E402
+from repro.runtime.elastic import ElasticBudget            # noqa: E402
+from repro.runtime.straggler import StragglerDetector      # noqa: E402
 from repro.stream import StreamConfig       # noqa: E402
-from repro.stream.fleet import FleetConfig, FleetExecutor  # noqa: E402
+from repro.stream.fleet import (Fault, FaultInjector,      # noqa: E402
+                                FaultSchedule, FleetConfig,
+                                FleetController, FleetExecutor)
 
 E = 8              # bridges (edge shards)
 D = 3              # accel_rms, strain, temperature
 BATCH = 64         # tuples per bridge per micro-batch
-STEPS = 30
+STEPS = 36
 QUAKE = range(12, 18)          # steps during which the burst happens
 HIT = (2, 3, 4, 5)             # bridges in the affected region
-CORE_BUDGET = 6                # fleet-wide core windows per tick
+CORE_BUDGET = 6                # initial fleet-wide core windows / tick
+DEAD = Fault(shard=6, start=20, end=26)     # bridge 6's uplink dies
 
 
 def edge_fn(params, batch):
@@ -64,8 +78,16 @@ def main():
     pl = pipe.two_tier_pipeline(edge_fn, core_fn, engine,
                                 core_params=core_p)
     cfg = FleetConfig(stream=scfg, num_shards=E, num_core=2,
-                      core_budget=CORE_BUDGET)
+                      core_budget=CORE_BUDGET, core_budget_max=16)
     ex = FleetExecutor(cfg, engine, pl)
+    ctl = FleetController(
+        ex,
+        budget_policy=ElasticBudget(min_budget=2, max_budget=32,
+                                    patience=2),
+        wall_detector=StragglerDetector(E, window=3, threshold=3.0,
+                                        patience=2))
+    sched = FaultSchedule([DEAD])
+    inj = FaultInjector(sched)
     state = ex.init_state(D)
 
     rng = np.random.default_rng(42)
@@ -83,15 +105,38 @@ def main():
         # bridge 7's uplink lags: its tuples arrive one batch behind
         ts[7] -= BATCH
         t0 += BATCH
-        state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts))
+        # stalled uplink: tuples buffer at the bridge; recovered:
+        # backlog drains oldest-first while fresh batches keep queueing
+        items, ts, offered = inj.inject(step, items, ts)
+        state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts),
+                             offered=jnp.asarray(offered))
+        dec = ctl.tick(state, step_times=sched.stall_time(step, E))
         esc = np.asarray(out.escalated)             # [E, NW]
-        if esc.any():
+        if esc.any() or dec.stragglers or dec.resized:
             hit = np.nonzero(esc.any(axis=1))[0]
             outs = np.asarray(out.outputs)
             cored = (np.abs(outs) <= 1.0).all(axis=-1) & esc  # tanh range
+            note = f", excluded bridges {dec.stragglers}" \
+                if dec.stragglers else ""
             print(f"step {step:2d}: bridges {hit.tolist()} escalated "
                   f"{int(esc.sum())} windows, core processed "
-                  f"{int(cored.sum())} (budget {CORE_BUDGET})")
+                  f"{int(cored.sum())} (budget {dec.budget})" + note)
+
+    # the stream is over but bridge 6's buffered tail isn't: drain it
+    # (plus a few quiet ticks) so every record is processed and the
+    # bridge earns its way back into the watermark pmin
+    step, quiet = STEPS, 0
+    while inj.pending or quiet < 3:
+        quiet = 0 if inj.pending else quiet + 1
+        items, ts, offered = inj.inject(
+            step, np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32), fresh=False)
+        state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts),
+                             offered=jnp.asarray(offered))
+        dec = ctl.tick(state, step_times=sched.stall_time(step, E))
+        step += 1
+    print(f"drained bridge {DEAD.shard}'s backlog by step {step}; "
+          f"healthy again: {bool(dec.healthy[DEAD.shard])}")
 
     m = state.metrics.as_dict()        # one host pull for every counter
     f = m["fleet"]
@@ -102,7 +147,12 @@ def main():
           f"{sum(m['core_processed'])} on the core sub-mesh, "
           f"{m['fleet_core_overflow']} over budget kept edge results")
     print(f"per-bridge escalations: {m['shard']['windows_escalated']}")
-    print(f"fleet step traced {ex.trace_count} time(s)")
+    print(f"bridge {DEAD.shard} catch-up records past the fleet "
+          f"watermark: {m['late_excluded'][DEAD.shard]} "
+          f"(late-dropped: 0 — counted, not lost)")
+    print(f"final budget {ex.core_budget} after {ctl.resizes} elastic "
+          f"resizes; fleet step traced {ex.trace_count} time(s) "
+          f"(bound: {ctl.max_trace_count})")
 
 
 if __name__ == "__main__":

@@ -159,31 +159,51 @@ class DataDrivenPipeline:
         return PipelineResult(outputs, cons, core_live, stored, dropped,
                               partial.stage_features + (core_feats,))
 
-    def _apply_stage(self, stage: Stage, outputs, live):
+    def _apply_stage(self, stage: Stage, outputs, live, core_budget=None):
         """Run a stage; core stages with a capacity run compacted.
 
         Returns (outputs, features, processed): ``processed`` marks the
         items the stage actually computed — capacity overflow items are
         not processed (they shed to the edge result, paper's graceful
         degradation), so the caller must not commit outputs or rule
-        consequences for them."""
+        consequences for them.
+
+        ``core_budget``: optional *traced* int32 scalar — the dynamic
+        budget of a core stage.  The static ``core_capacity`` stays the
+        compaction shape; the budget masks how many of those slots get
+        real work (first-come-first-kept, same order as the capacity
+        shed), so an elastic resize between steps changes an operand,
+        not the trace."""
         from repro.core import routing as RT
         cap = self.core_capacity
-        if stage.placement != "core" or cap is None or cap >= live.shape[0]:
+        if stage.placement != "core":
             out, feats = stage.fn(stage.params, outputs)
             return out, feats, jnp.ones_like(live)
+        allowed = live
+        if core_budget is not None:
+            allowed = live & (jnp.cumsum(live.astype(jnp.int32))
+                              <= core_budget)
+        if cap is None or cap >= live.shape[0]:
+            out, feats = stage.fn(stage.params, outputs)
+            return out, feats, allowed
         return RT.compact_apply(
-            functools.partial(stage.fn, stage.params), outputs, live, cap)
+            functools.partial(stage.fn, stage.params), outputs, allowed, cap)
 
     def run(self, batch: jnp.ndarray,
-            live: jnp.ndarray | None = None) -> PipelineResult:
+            live: jnp.ndarray | None = None,
+            core_budget: jnp.ndarray | None = None) -> PipelineResult:
         """Jit-compatible: every stage runs on the full fixed-shape batch;
         rule consequences mask which items the next stage *commits*.
 
         ``live``: optional [N] bool entry mask — padding/ungated rows
         (False) pass through untouched: no stage outputs committed, no
         rules evaluated, no escalation, and they never consume core
-        capacity."""
+        capacity.
+
+        ``core_budget``: optional traced int32 scalar bounding how many
+        escalated items core stages actually process this call (the
+        rest shed to their edge results).  ``None`` keeps the static
+        ``core_capacity`` semantics unchanged."""
         # the edge prefix is exactly run_edge (one copy of the gating
         # logic — the fleet runs the same prefix per shard); this loop
         # only adds the core leg with its capacity compaction
@@ -200,7 +220,8 @@ class DataDrivenPipeline:
         feats_all = list(partial.stage_features)
         for i in range(ci, len(self.stages)):
             stage = self.stages[i]
-            new_out, feats, processed = self._apply_stage(stage, outputs, live)
+            new_out, feats, processed = self._apply_stage(
+                stage, outputs, live, core_budget)
             feats_all.append(feats)
             # commit outputs only for live, actually-processed items
             # (masked update keeps shapes; overflow keeps edge results)

@@ -180,7 +180,8 @@ def escalation_plan(escalate: jnp.ndarray, offset: jnp.ndarray,
 
 
 def escalation_recv_slots(counts: jnp.ndarray, rank: jnp.ndarray,
-                          num_core: int, capacity: int, budget: int
+                          num_core: int, capacity: int,
+                          budget: int | jnp.ndarray
                           ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Receive-side dual of :func:`escalation_plan`: which slots of the
     post-all-to-all ``[num_ranks, capacity, ...]`` buffer hold real

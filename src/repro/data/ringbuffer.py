@@ -40,13 +40,33 @@ def create(capacity: int, item_shape: tuple, dtype=jnp.float32) -> RingBuffer:
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def enqueue(rb: RingBuffer, items: jnp.ndarray) -> tuple[RingBuffer, jnp.ndarray]:
+def enqueue(rb: RingBuffer, items: jnp.ndarray,
+            mask: jnp.ndarray | None = None
+            ) -> tuple[RingBuffer, jnp.ndarray]:
     """Append up to len(items); returns (rb, n_accepted).  Items beyond
-    free space are rejected (backpressure), not overwritten."""
+    free space are rejected (backpressure), not overwritten.
+
+    ``mask``: optional [N] bool — only True rows are offered (a
+    producer batch is a fixed-shape slot array; a stalled or empty
+    producer offers fewer real items than slots).  Masked-out rows
+    never enter the ring and don't count against free space; FIFO
+    order among offered rows is preserved (stable compaction).
+    """
     cap = rb.buf.shape[0]
     n = items.shape[0]
+    if mask is not None:
+        m = mask.astype(bool)
+        offered = jnp.sum(m.astype(jnp.int32))
+        # O(n) stable compaction (no sort on the hot path): offered
+        # rows scatter to their offered-rank, masked-out rows to a
+        # discard slot past the batch
+        slot = jnp.where(m, jnp.cumsum(m.astype(jnp.int32)) - 1, n)
+        items = jnp.zeros((n + 1,) + items.shape[1:], items.dtype) \
+            .at[slot].set(items)[:n]
+    else:
+        offered = jnp.int32(n)
     free = cap - (rb.head - rb.tail)
-    n_acc = jnp.minimum(n, free)
+    n_acc = jnp.minimum(offered, free)
     idx = (rb.head + jnp.arange(n, dtype=jnp.int32)) % cap
     accept = jnp.arange(n, dtype=jnp.int32) < n_acc
     # rejected rows scatter to a discard row past the ring (accepted

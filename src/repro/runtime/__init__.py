@@ -3,7 +3,8 @@ gradient compression, compute/comm overlap."""
 from repro.runtime.compression import (cross_pod_allreduce, compress_tree,  # noqa: F401
                                        decompress_tree, dequantize,
                                        init_errors, quantize)
-from repro.runtime.elastic import rebuild_overlay, remesh, reshard_state  # noqa: F401
+from repro.runtime.elastic import (ElasticBudget, rebuild_overlay,  # noqa: F401
+                                   remesh, reshard_state)
 from repro.runtime.health import HealthMonitor  # noqa: F401
 from repro.runtime.overlap import microbatched_grads  # noqa: F401
 from repro.runtime.straggler import StragglerDetector  # noqa: F401

@@ -6,9 +6,16 @@ stores unsharded logical arrays; this module recomputes shardings for
 the new mesh and re-places state.  The quadtree overlay is rebuilt from
 the new mesh shape (the paper's join/rebootstrap phase, done at
 re-launch time rather than via runtime discovery messages).
+
+The same join/leave machinery has a stream-facing face:
+``ElasticBudget`` resizes the fleet core budget between ticks from
+observed escalation pressure — capacity joins (grows) under sustained
+load and leaves (shrinks) when idle, exactly the remesh trade applied
+to the core sub-mesh's per-tick work budget instead of its chip count.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
@@ -42,6 +49,54 @@ def reshard_state(state, sharding_fn: Callable, mesh) -> object:
     shardings = sharding_fn(mesh)
     return jax.tree.map(
         lambda a, s: jax.device_put(a, s), state, shardings)
+
+
+@dataclasses.dataclass
+class ElasticBudget:
+    """Hysteresis grow/shrink policy for an elastic per-tick work budget.
+
+    Feed it the observed demand (fleet escalations this tick) and the
+    current budget; it proposes a new budget.  Growth fires after
+    ``patience`` consecutive ticks at utilization >= ``grow_at``;
+    shrink after ``patience`` consecutive ticks at <= ``shrink_at`` —
+    the two-sided deadband keeps a noisy workload from thrashing the
+    budget (each fleet resize is a real event: a possible re-trace and
+    a capacity re-negotiation, the stream analogue of a remesh).
+    """
+    min_budget: int
+    max_budget: int
+    grow_at: float = 0.9          # utilization that counts as pressure
+    shrink_at: float = 0.25       # utilization that counts as idle
+    grow_factor: float = 2.0      # multiplicative grow / shrink step
+    patience: int = 2             # consecutive ticks before resizing
+    _hot: int = 0
+    _cold: int = 0
+
+    def __post_init__(self):
+        if not (0 < self.min_budget <= self.max_budget):
+            raise ValueError(f"bad budget range: {self}")
+        if not (0.0 <= self.shrink_at < self.grow_at):
+            raise ValueError(f"need 0 <= shrink_at < grow_at, got {self}")
+        if self.grow_factor <= 1.0 or self.patience < 1:
+            raise ValueError(f"need grow_factor > 1, patience >= 1: {self}")
+
+    def propose(self, demand: int, budget: int) -> int:
+        """One control tick: observed demand -> proposed budget."""
+        util = demand / max(budget, 1)
+        if util >= self.grow_at:
+            self._hot, self._cold = self._hot + 1, 0
+        elif util <= self.shrink_at:
+            self._hot, self._cold = 0, self._cold + 1
+        else:
+            self._hot = self._cold = 0
+        if self._hot >= self.patience:
+            self._hot = 0
+            return min(self.max_budget,
+                       max(budget + 1, int(budget * self.grow_factor)))
+        if self._cold >= self.patience:
+            self._cold = 0
+            return max(self.min_budget, int(budget / self.grow_factor))
+        return budget
 
 
 def rebuild_overlay(mesh, **kw) -> Overlay:

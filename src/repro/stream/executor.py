@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Iterable, NamedTuple
 
 import jax
@@ -140,12 +141,15 @@ class IngestResult(NamedTuple):
     n_accepted: jnp.ndarray
     n_dequeued: jnp.ndarray
     n_late: jnp.ndarray
+    n_late_excluded: jnp.ndarray   # admitted, but late vs the fleet ref
 
 
 def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
                       state: StreamState, items: jnp.ndarray,
                       ts: jnp.ndarray,
-                      watermark_ts: jnp.ndarray | None = None
+                      watermark_ts: jnp.ndarray | None = None,
+                      offer_mask: jnp.ndarray | None = None,
+                      excluded_ref: jnp.ndarray | None = None
                       ) -> IngestResult:
     """enqueue -> dequeue -> watermark -> carry-continuous windows ->
     rule features, as one fixed-shape pure function.
@@ -155,18 +159,36 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
     *fleet-wide minimum* of per-shard maxima so lagging shards hold
     back window close everywhere.  The shard's own running max still
     only ever advances (a laggy fleet watermark never rolls it back).
+
+    ``offer_mask``: optional [N] bool — which producer slots hold real
+    items this tick (a stalled uplink offers nothing; shapes stay
+    fixed).  ``excluded_ref``: optional fleet watermark reference used
+    only for *accounting*: items admitted by ``watermark_ts`` but late
+    by ``excluded_ref`` are counted in ``n_late_excluded`` — the
+    catch-up records of a straggler-excluded shard, processed locally
+    and flagged, never silently dropped.
     """
     n_in = items.shape[0]
     rows_in = jnp.concatenate(
         [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
         axis=1)
-    rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+    if offer_mask is None:
+        rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+        n_offered = jnp.int32(n_in)
+    else:
+        rb, n_acc = rbuf.enqueue(state.rb, rows_in, offer_mask)
+        n_offered = jnp.sum(offer_mask.astype(jnp.int32))
 
     rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
     wm = state.max_ts if watermark_ts is None else watermark_ts
     valid, n_late, max_ts = W.apply_watermark(
         rows[:, 0], valid, wm, cfg.lateness)
     max_ts = jnp.maximum(state.max_ts, max_ts)
+    if excluded_ref is None:
+        n_lx = jnp.zeros((), jnp.int32)
+    else:
+        n_lx = jnp.sum((valid & (rows[:, 0] < excluded_ref - cfg.lateness))
+                       .astype(jnp.int32))
 
     # cross-batch continuity: prepend the carried W-S samples
     seq = jnp.concatenate([state.carry, rows], axis=0)
@@ -190,9 +212,9 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
         if cfg.carry_len else seq_valid[:0],
         max_ts=max_ts, aggregates=agg, window_count=wcount, features=feats,
         consequence=cons, emit=emit, record=record,
-        n_in=jnp.int32(n_in), n_accepted=n_acc,
+        n_in=n_offered, n_accepted=n_acc,
         n_dequeued=jnp.sum(valid.astype(jnp.int32)) + n_late,
-        n_late=n_late)
+        n_late=n_late, n_late_excluded=n_lx)
 
 
 def advance_metrics(m: StreamMetrics, ing: IngestResult,
@@ -235,6 +257,8 @@ class StreamExecutor:
         self.engine = engine
         self.pipeline = pipeline
         self._traces = 0
+        self._budget = None            # dynamic core budget (traced operand)
+        self.last_step_seconds = 0.0   # host wall time of the last step()
         self._jstep = jax.jit(self._step, donate_argnums=(0,))
 
     # -- state ------------------------------------------------------------
@@ -253,9 +277,30 @@ class StreamExecutor:
         """Number of step traces so far — 1 after warmup, forever."""
         return self._traces
 
+    @property
+    def core_budget(self) -> int | None:
+        """Dynamic core budget, or None for the pipeline's static cap."""
+        return self._budget
+
+    def set_core_budget(self, budget: int) -> None:
+        """Resize the effective core budget between steps.  The budget
+        is a *traced operand* of the step, so resizes never recompile —
+        the static ``pipeline.core_capacity`` stays the compaction
+        shape (and the resize ceiling)."""
+        if budget < 0:
+            raise ValueError(f"core budget must be >= 0, got {budget}")
+        self._budget = int(budget)
+
+    def _effective_budget(self) -> int:
+        cap = self.pipeline.core_capacity
+        if self._budget is None:
+            return cap if cap is not None else self.cfg.windows_per_step
+        return self._budget if cap is None else min(self._budget, cap)
+
     # -- the single-trace step --------------------------------------------
     def _step(self, state: StreamState, items: jnp.ndarray,
-              ts: jnp.ndarray) -> tuple[StreamState, StepOutput]:
+              ts: jnp.ndarray, budget: jnp.ndarray
+              ) -> tuple[StreamState, StepOutput]:
         # the Python body runs exactly once per jit trace, so this
         # counts (re)traces without reaching into jit internals
         self._traces += 1
@@ -263,12 +308,11 @@ class StreamExecutor:
 
         # non-emitted windows (count < min_count) enter the pipeline
         # dead: no rules, no escalation, no core-capacity consumption
-        result = self.pipeline.run(ing.record, live=ing.emit)
+        result = self.pipeline.run(ing.record, live=ing.emit,
+                                   core_budget=budget)
         escalated = result.escalated
         n_esc = jnp.sum(escalated.astype(jnp.int32))
-        cap = self.pipeline.core_capacity
-        overflow = jnp.maximum(0, n_esc - cap) if cap is not None \
-            else jnp.zeros((), jnp.int32)
+        overflow = jnp.maximum(0, n_esc - budget)
 
         metrics = advance_metrics(
             state.metrics, ing, n_esc,
@@ -293,8 +337,17 @@ class StreamExecutor:
         Timestamps ride the ring as float32 (one row per sample), so
         event-time resolution degrades past ~2^24 time units; scale
         long-running tick counters (e.g. seconds since stream start,
-        not epoch nanoseconds) to stay inside that range."""
-        return self._jstep(state, items, ts)
+        not epoch nanoseconds) to stay inside that range.
+
+        ``last_step_seconds`` records the host wall time of the call —
+        dispatch time unless the caller synchronizes, the full step if
+        it does (the control plane feeds these into its straggler
+        detector; real deployments substitute per-device telemetry)."""
+        t0 = time.perf_counter()
+        out = self._jstep(state, items, ts,
+                          jnp.asarray(self._effective_budget(), jnp.int32))
+        self.last_step_seconds = time.perf_counter() - t0
+        return out
 
     def run(self, state: StreamState,
             producer: Iterable[tuple[jnp.ndarray, jnp.ndarray]],

@@ -1,3 +1,10 @@
+from repro.stream.fleet.control import (  # noqa: F401
+    ControlDecision,
+    Fault,
+    FaultInjector,
+    FaultSchedule,
+    FleetController,
+)
 from repro.stream.fleet.executor import (  # noqa: F401
     FleetConfig,
     FleetExecutor,

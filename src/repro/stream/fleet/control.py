@@ -1,0 +1,286 @@
+"""Adaptive fleet control plane: elastic core budget + straggler-aware
+watermark, as one host-side loop between device ticks.
+
+The paper's edge tier is Raspberry-Pi-class hardware that slows down,
+stalls, and churns; PR 3's fleet runtime assumed a healthy fleet (a
+static ``core_budget``, a plain ``pmin`` watermark that one dead shard
+freezes fleet-wide).  ``FleetController`` closes both gaps with a
+per-tick observe -> decide -> actuate loop that never touches the
+traced data path's *shape*:
+
+            ┌────────────────────── host ──────────────────────┐
+            │   FleetController.tick()                         │
+            │   wall-time ──> StragglerDetector ─┐             │
+            │   event-lag ──> StragglerDetector ─┼─> health    │
+            │   escalations ─> ElasticBudget ────┼─> budget    │
+            └──────────────┬─────────────────────┼─────────────┘
+                  operands │ (no recompile)      │
+            ┌──────────────▼─────────────────────▼── device ───┐
+            │  FleetExecutor.step(state, items, ts, offered)   │
+            │  wm = pmin over HEALTHY shards; excluded shards  │
+            │  fall back to their own watermark (catch-up) and │
+            │  count late-vs-fleet records in late_excluded    │
+            └──────────────────────────────────────────────────┘
+
+* **Elastic core budget** — per-shard escalation counts (already in
+  ``FleetMetrics``) feed an ``runtime.elastic.ElasticBudget`` policy;
+  sustained pressure grows the budget, idle ticks shrink it.  The
+  budget is a traced operand, so resizes within the static slot
+  ceiling recompile nothing; growing past the ceiling re-traces
+  exactly once (``trace_count <= 1 + resizes``, asserted by tests and
+  ``benchmarks/fleet.py``).
+* **Straggler-aware watermark** — per-shard step wall-times and
+  per-shard max event times feed two ``runtime.straggler``
+  detectors (wall-clock slowness; event-time lag behind the fleet
+  max).  Flagged shards are excluded from the watermark ``pmin`` via
+  a health mask, so a stalled shard no longer blocks window close for
+  healthy shards.  The excluded shard keeps processing against its
+  *own* watermark — the catch-up path — and every record it admits
+  past the fleet reference lands in the ``late_excluded`` counter,
+  never a silent drop.  The published fleet reference is *monotone*
+  (the executor clamps it against the previous tick), and re-admission
+  waits until the shard's lag is inside the stream's lateness bound —
+  so rejoining never rolls the watermark back and never converts the
+  catch-up backlog into silent late-drops.  When its timings/lag
+  normalize the shard rejoins the ``pmin`` automatically.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.runtime.elastic import ElasticBudget
+from repro.runtime.straggler import StragglerDetector
+from repro.stream.fleet.executor import FleetExecutor, FleetState
+
+
+class ControlDecision(NamedTuple):
+    """What one control tick observed and actuated."""
+    budget: int                   # budget in force for the next tick
+    resized: bool                 # did the budget change this tick
+    retraced: bool                # did the resize grow the slot ceiling
+    healthy: np.ndarray           # [E] bool mask installed for next tick
+    stragglers: list              # ranks currently flagged (wall | lag)
+    escalated: np.ndarray         # [E] int, this tick's escalations
+    watermark: float              # fleet reference used by the last tick
+
+
+@dataclasses.dataclass
+class FleetController:
+    """Host-side per-tick control plane for a :class:`FleetExecutor`.
+
+    Call :meth:`tick` once after every ``executor.step``.  It pulls a
+    small host snapshot (per-shard escalation counters, per-shard max
+    event times, the watermark actually used), runs the detectors and
+    the budget policy, and installs the results on the executor for
+    the next tick.  Everything it actuates is a traced operand — the
+    loop cannot de-optimize the data path.
+
+    ``step_times``: callers with real per-device telemetry pass it to
+    :meth:`tick`; otherwise the executor's own host wall time is
+    replicated fleet-wide (a uniform signal never flags anyone — the
+    detectors are relative).
+
+    ``lag_tolerance`` is in *event-time units*: how far a shard's max
+    event time may trail the fleet max before it counts as lagging
+    (default: two micro-batches of samples at one time-unit spacing,
+    matching the repo's examples; set it to your stream's real
+    cadence).
+    """
+    executor: FleetExecutor
+    budget_policy: ElasticBudget | None = None
+    wall_detector: StragglerDetector | None = None
+    lag_detector: StragglerDetector | None = None
+    lag_tolerance: float | None = None
+    _prev_escalated: np.ndarray = None
+    _prev_healthy: np.ndarray = None
+    _resizes: int = 0
+    _retraces: int = 0
+
+    def __post_init__(self):
+        cfg = self.executor.cfg
+        e = cfg.num_shards
+        if self.budget_policy is None:
+            self.budget_policy = ElasticBudget(
+                min_budget=1, max_budget=max(1, 2 * cfg.core_slots))
+        if self.lag_tolerance is None:
+            self.lag_tolerance = 2.0 * cfg.stream.micro_batch
+        if self.wall_detector is None:
+            self.wall_detector = StragglerDetector(
+                e, window=8, threshold=3.0, patience=2)
+        if self.lag_detector is None:
+            self.lag_detector = StragglerDetector(
+                e, window=4, threshold=4.0, patience=2,
+                floor=float(self.lag_tolerance))
+        if self._prev_escalated is None:
+            self._prev_escalated = np.zeros(e, np.int64)
+        if self._prev_healthy is None:
+            self._prev_healthy = np.ones(e, bool)
+
+    @property
+    def resizes(self) -> int:
+        """Budget resizes actuated so far (for trace-bound asserts)."""
+        return self._resizes
+
+    def tick(self, state: FleetState,
+             step_times: np.ndarray | None = None) -> ControlDecision:
+        """One control tick: observe ``state``, actuate health mask +
+        budget on the executor for the next data tick."""
+        ex = self.executor
+        e = ex.cfg.num_shards
+        # one host pull for everything the loop needs
+        max_ts, esc_total, wm = jax.device_get(
+            (state.shard.max_ts, state.shard.metrics.windows_escalated,
+             state.watermark))
+        max_ts = np.asarray(max_ts, np.float64)
+        esc_total = np.asarray(esc_total, np.int64)
+        escalated = esc_total - self._prev_escalated
+        self._prev_escalated = esc_total
+
+        # -- straggler detection: wall-clock + event-time lag ----------
+        if step_times is None:
+            step_times = np.full(e, max(ex.last_step_seconds, 1e-9))
+        self.wall_detector.observe(np.asarray(step_times, np.float64))
+        # lag is measured against the fleet max; the epsilon floor only
+        # turns a zero lag into a *present* measurement (not a missing
+        # sample) — it must never nudge a shard sitting exactly at
+        # lag_tolerance over the detector floor, so max(), not add
+        lag = np.maximum(max_ts.max() - max_ts, 1e-9)
+        self.lag_detector.observe(lag)
+        flagged = sorted(set(self.wall_detector.stragglers())
+                         | set(self.lag_detector.stragglers()))
+        healthy = np.ones(e, bool)
+        healthy[list(flagged)] = False
+        # re-admission hysteresis: the fleet reference is monotone (the
+        # executor clamps it), so an excluded shard only rejoins the
+        # pmin once its records would *survive* that reference — i.e.
+        # its lag is within the stream's lateness bound.  Rejoining
+        # earlier would silently late-drop its catch-up backlog.
+        lateness = ex.cfg.stream.lateness
+        caught_up = (max_ts.max() - max_ts) <= lateness
+        healthy &= self._prev_healthy | caught_up
+        self._prev_healthy = healthy
+        ex.set_health(healthy)
+        flagged = [int(r) for r in np.nonzero(~healthy)[0]]
+
+        # -- elastic budget ---------------------------------------------
+        old_budget, old_slots = ex.core_budget, ex.core_slots
+        proposed = self.budget_policy.propose(int(escalated.sum()),
+                                              old_budget)
+        resized = proposed != old_budget
+        if resized:
+            ex.set_core_budget(proposed)
+            self._resizes += 1
+        retraced = ex.core_slots != old_slots
+        if retraced:
+            self._retraces += 1
+        return ControlDecision(
+            budget=ex.core_budget, resized=resized, retraced=retraced,
+            healthy=healthy, stragglers=flagged, escalated=escalated,
+            watermark=float(np.asarray(wm).reshape(-1)[0]))
+
+    @property
+    def max_trace_count(self) -> int:
+        """Upper bound the executor's trace count must respect:
+        ``1 + (#resizes that grew the slot ceiling)``."""
+        return 1 + self._retraces
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected degradation: ``shard`` stalls at tick ``start`` and
+    recovers at tick ``end`` (exclusive) — during the stall its
+    producer batches buffer upstream (offered mask False) and its
+    step wall-time balloons."""
+    shard: int
+    start: int
+    end: int
+
+    def __post_init__(self):
+        if self.start >= self.end or self.shard < 0:
+            raise ValueError(f"bad fault window: {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Deterministic degradation script for tests, the example, and the
+    ``--faults`` benchmark mode: which shards are stalled at each
+    tick.  Purely declarative — :class:`FaultInjector` turns it into
+    offered-masks and buffered backlogs, and :meth:`stall_time` into
+    synthetic per-shard telemetry."""
+    faults: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    def stalled(self, tick: int) -> set:
+        """Shards stalled at ``tick``."""
+        return {f.shard for f in self.faults if f.start <= tick < f.end}
+
+    def stall_time(self, tick: int, num_shards: int, base: float = 0.1,
+                   stalled_factor: float = 50.0) -> np.ndarray:
+        """Synthetic per-shard wall times for ``tick``: ``base`` for
+        healthy shards, ``base * stalled_factor`` for stalled ones —
+        what real per-device telemetry would report."""
+        t = np.full(num_shards, base)
+        for s in self.stalled(tick):
+            t[s] = base * stalled_factor
+        return t
+
+
+class FaultInjector:
+    """Drives a :class:`FaultSchedule` against a fleet feed: the one
+    copy of the stall/backlog/drain bookkeeping shared by the fault
+    tests, the degraded benchmark, and the example.
+
+    A stalled shard's batches buffer upstream (offered mask False); a
+    recovered shard drains its backlog oldest-first at production rate
+    while fresh batches keep queueing (the catch-up path).  After the
+    stream ends, keep calling :meth:`inject` with ``fresh=False`` (and
+    ``tick`` advancing past the fault windows — a still-stalled uplink
+    never delivers) until :attr:`pending` is 0 so the tail drains —
+    otherwise the buffered records really would be lost, which is
+    exactly what the control plane exists to prevent.
+    """
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+        self._backlog = collections.defaultdict(collections.deque)
+        for f in schedule.faults:
+            self._backlog[f.shard]          # materialize per-shard queues
+
+    @property
+    def pending(self) -> int:
+        """Batches still buffered upstream across all faulted shards."""
+        return sum(len(q) for q in self._backlog.values())
+
+    def inject(self, tick: int, items: np.ndarray, ts: np.ndarray,
+               fresh: bool = True
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Apply the schedule to this tick's producer batch.
+
+        items: [E, N, D], ts: [E, N] (the healthy ground-truth feed;
+        with ``fresh=False`` both are only a shape/dtype template for a
+        drain tick).  Returns (items, ts, offered) copies with stalled
+        shards blanked and recovering shards replaying their backlog.
+        """
+        items, ts = items.copy(), ts.copy()
+        offered = np.full(ts.shape, fresh, bool)
+        for s, q in self._backlog.items():
+            stalled = s in self.schedule.stalled(tick)
+            if fresh and stalled:
+                q.append((items[s].copy(), ts[s].copy()))
+                offered[s] = False
+                items[s] = 0.0
+            elif q and not stalled:
+                # a still-stalled uplink never delivers, even on drain
+                # ticks — keep `tick` advancing past the fault windows
+                if fresh:
+                    q.append((items[s].copy(), ts[s].copy()))
+                items[s], ts[s] = q.popleft()
+                offered[s] = True
+        return items, ts, offered

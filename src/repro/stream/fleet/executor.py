@@ -27,6 +27,7 @@ lone devices except where the fleet semantics intentionally differ —
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import NamedTuple
 
 import jax
@@ -46,12 +47,17 @@ from repro.stream.fleet import federation as F
 
 @dataclasses.dataclass(frozen=True)
 class FleetConfig:
-    """Fleet topology + budget knobs (all static: part of the single
-    trace, like ``StreamConfig``)."""
+    """Fleet topology + budget knobs.  Topology fields are static (part
+    of the single trace, like ``StreamConfig``); ``core_budget`` is
+    only the *initial* value of the dynamic budget — the control plane
+    resizes it between ticks without recompiling, up to the static
+    shape ceiling ``core_budget_max`` (defaults to ``core_budget``;
+    growing past it costs exactly one re-trace)."""
     stream: StreamConfig           # per-shard stream config
     num_shards: int                # E devices on the "edge" mesh axis
     num_core: int = 1              # core sub-mesh = ranks 0..num_core-1
-    core_budget: int = 8           # fleet-level escalations / step
+    core_budget: int = 8           # initial fleet-level escalations / step
+    core_budget_max: int | None = None   # static slot ceiling (shape)
     axis_name: str = "edge"
 
     def __post_init__(self):
@@ -62,6 +68,15 @@ class FleetConfig:
                              f"{self.num_core} / {self.num_shards}")
         if self.core_budget < 0:
             raise ValueError(f"core_budget must be >= 0, got {self}")
+        if self.core_budget_max is not None \
+                and self.core_budget_max < self.core_budget:
+            raise ValueError(f"core_budget_max < core_budget: {self}")
+
+    @property
+    def core_slots(self) -> int:
+        """Static shape ceiling of the dynamic core budget."""
+        return self.core_budget if self.core_budget_max is None \
+            else self.core_budget_max
 
     @property
     def route_capacity(self) -> int:
@@ -82,6 +97,8 @@ class FleetMetrics(NamedTuple):
     core_received: jnp.ndarray      # records landed here as core rank
     core_processed: jnp.ndarray     # of those, got core compute
     fleet_core_overflow: jnp.ndarray  # fleet windows beyond budget
+    late_excluded: jnp.ndarray      # records admitted past the fleet wm
+    watermark: jnp.ndarray          # fleet watermark used last tick (f32)
 
     def as_dict(self) -> dict:
         """Host-side snapshot: a single ``jax.device_get`` for the
@@ -104,6 +121,8 @@ class FleetMetrics(NamedTuple):
             "core_received": _shard(host.core_received),
             "core_processed": _shard(host.core_processed),
             "fleet_core_overflow": _fleet(host.fleet_core_overflow),
+            "late_excluded": _shard(host.late_excluded),
+            "watermark": float(np.asarray(host.watermark).reshape(-1)[0]),
         }
 
 
@@ -116,12 +135,15 @@ class FleetState(NamedTuple):
     core_received: jnp.ndarray
     core_processed: jnp.ndarray
     fleet_core_overflow: jnp.ndarray
+    late_excluded: jnp.ndarray      # per-shard catch-up record counter
+    watermark: jnp.ndarray          # [E] f32, fleet reference (replicated)
 
     @property
     def metrics(self) -> FleetMetrics:
         return FleetMetrics(self.shard.metrics, self.fleet,
                             self.escalations_sent, self.core_received,
-                            self.core_processed, self.fleet_core_overflow)
+                            self.core_processed, self.fleet_core_overflow,
+                            self.late_excluded, self.watermark)
 
 
 class FleetExecutor:
@@ -156,18 +178,69 @@ class FleetExecutor:
                              f"says {cfg.num_shards}")
         self.mesh = mesh
         self._traces = 0
+        self._budget = cfg.core_budget       # dynamic, a traced operand
+        self._slots = cfg.core_slots         # static shape ceiling
+        self._healthy = np.ones(cfg.num_shards, bool)
+        self.last_step_seconds = 0.0
+        self._build()
+
+    def _build(self) -> None:
+        """(Re)build the jitted fleet step for the current static slot
+        ceiling.  Called once at init and again only when the control
+        plane grows the budget past ``self._slots`` — each rebuild
+        costs exactly one re-trace on the next step."""
+        cfg = self.cfg
         spec = P(cfg.axis_name)
-        sharded = shard_map(self._fleet_step, mesh=mesh,
-                            in_specs=(spec, spec, spec),
+        sharded = shard_map(self._fleet_step, mesh=self.mesh,
+                            in_specs=(spec, spec, spec, spec, spec, P()),
                             out_specs=(spec, spec))
 
-        def _traced(state, items, ts):
+        def _traced(state, items, ts, offered, healthy, budget):
             # outer jit body runs once per trace (shard_map may re-trace
             # its inner fn during lowering; don't count those)
             self._traces += 1
-            return sharded(state, items, ts)
+            return sharded(state, items, ts, offered, healthy, budget)
 
         self._jstep = jax.jit(_traced, donate_argnums=(0,))
+
+    # -- control-plane knobs (host-side, between ticks) --------------------
+    @property
+    def core_budget(self) -> int:
+        """Current dynamic fleet core budget."""
+        return self._budget
+
+    @property
+    def core_slots(self) -> int:
+        """Current static slot ceiling of the budget (shape)."""
+        return self._slots
+
+    def set_core_budget(self, budget: int) -> None:
+        """Resize the fleet core budget between ticks.  Budgets within
+        the current slot ceiling change only a traced operand (zero
+        recompiles); growing past it rebuilds the step for the larger
+        shape — at most one re-trace per resize, which the benchmarks
+        and regression tests assert."""
+        budget = int(budget)
+        if budget < 0:
+            raise ValueError(f"core_budget must be >= 0, got {budget}")
+        if budget > self._slots:
+            self._slots = budget
+            self._build()
+        self._budget = budget
+
+    def set_health(self, healthy: np.ndarray) -> None:
+        """Install the per-shard health mask used by the *next* tick's
+        watermark (False = excluded from the fleet ``pmin``).  Comes
+        from the control plane's straggler detectors."""
+        healthy = np.asarray(healthy, bool)
+        if healthy.shape != (self.cfg.num_shards,):
+            raise ValueError(f"health mask must be [{self.cfg.num_shards}]"
+                             f", got {healthy.shape}")
+        self._healthy = healthy.copy()
+
+    @property
+    def health(self) -> np.ndarray:
+        return self._healthy.copy()
 
     # -- state ------------------------------------------------------------
     def init_state(self, feature_dim: int) -> FleetState:
@@ -193,6 +266,9 @@ class FleetExecutor:
             fleet=StreamMetrics(*(zero() for _ in StreamMetrics._fields)),
             escalations_sent=zero(), core_received=zero(),
             core_processed=zero(), fleet_core_overflow=zero(),
+            late_excluded=zero(),
+            watermark=jnp.full((E,), jnp.finfo(jnp.float32).min,
+                               jnp.float32),
         )
 
     @property
@@ -202,27 +278,45 @@ class FleetExecutor:
 
     # -- the single-trace fleet tick ---------------------------------------
     def _fleet_step(self, state: FleetState, items: jnp.ndarray,
-                    ts: jnp.ndarray) -> tuple[FleetState, StepOutput]:
+                    ts: jnp.ndarray, offered: jnp.ndarray,
+                    healthy: jnp.ndarray, budget: jnp.ndarray
+                    ) -> tuple[FleetState, StepOutput]:
         cfg = self.cfg
         s = jax.tree.map(lambda x: x[0], state)        # this shard's block
+        h = healthy[0]                                 # this shard's flag
 
         # fleet watermark: min of per-shard maxima (as of the previous
-        # step) — a lagging shard holds back lateness fleet-wide
-        wm = F.fleet_watermark(s.shard.max_ts, cfg.axis_name)
+        # step) over *healthy* shards — a lagging-but-healthy shard
+        # holds back lateness fleet-wide; a flagged straggler doesn't.
+        # An excluded shard falls back to its own running max (exact
+        # single-device semantics): it keeps processing its backlog —
+        # the catch-up path — and every record it admits past the fleet
+        # reference is counted in late_excluded, never silently lost.
+        # Clamped against the previous reference: re-admitting a shard
+        # that still trails must not roll the published watermark back
+        # (watermarks are monotone; the control plane delays
+        # re-admission until the shard's records would survive this
+        # reference, so the clamp never converts into silent drops).
+        wm = jnp.maximum(
+            F.fleet_watermark(s.shard.max_ts, cfg.axis_name, healthy=h),
+            s.watermark)
+        eff_wm = jnp.where(h, wm, s.shard.max_ts)
         ing = ingest_and_window(cfg.stream, self.engine, s.shard,
-                                items[0], ts[0], watermark_ts=wm)
+                                items[0], ts[0], watermark_ts=eff_wm,
+                                offer_mask=offered[0], excluded_ref=wm)
 
         # edge pipeline stages + rule gating, purely local
         partial, core_live = self.pipeline.run_edge(ing.record,
                                                     live=ing.emit)
 
         # escalation: one all-to-all out, fleet-budgeted core stage,
-        # one all-to-all back
+        # one all-to-all back; the budget is a traced operand, its
+        # static shape ceiling (self._slots) is baked into the trace
         core_out, core_feats, processed, stats = F.federate_escalations(
             partial.outputs, core_live, self.pipeline.run_core,
             axis_name=cfg.axis_name, num_shards=cfg.num_shards,
-            num_core=cfg.num_core, core_budget=cfg.core_budget,
-            capacity=cfg.route_capacity)
+            num_core=cfg.num_core, core_budget=budget,
+            capacity=cfg.route_capacity, core_slots=self._slots)
         result = self.pipeline.commit_core(partial, core_live, core_out,
                                            core_feats, processed)
 
@@ -243,6 +337,8 @@ class FleetExecutor:
             core_processed=s.core_processed + stats.core_processed,
             fleet_core_overflow=s.fleet_core_overflow
             + stats.fleet_overflow,
+            late_excluded=s.late_excluded + ing.n_late_excluded,
+            watermark=wm.astype(jnp.float32),
         )
         out = StepOutput(ing.aggregates, ing.features, ing.window_count,
                          ing.consequence, result.escalated, result.outputs)
@@ -251,9 +347,25 @@ class FleetExecutor:
 
     # -- public API ---------------------------------------------------------
     def step(self, state: FleetState, items: jnp.ndarray,
-             ts: jnp.ndarray) -> tuple[FleetState, StepOutput]:
+             ts: jnp.ndarray, offered: jnp.ndarray | None = None
+             ) -> tuple[FleetState, StepOutput]:
         """One fleet tick: offer ``items [E, N, D]`` with event
         timestamps ``ts [E, N]`` (one producer batch per shard),
         consume one window batch per shard.  Returned ``StepOutput``
-        leaves carry a leading [E] shard axis."""
-        return self._jstep(state, items, ts)
+        leaves carry a leading [E] shard axis.
+
+        ``offered``: optional [E, N] bool — which producer slots hold
+        real items (a stalled shard's uplink offers nothing while its
+        batches buffer upstream; shapes stay fixed, so the single
+        trace survives fleet degradation).  The current health mask
+        (``set_health``) and dynamic core budget (``set_core_budget``)
+        ride along as traced operands.  ``last_step_seconds`` records
+        the host wall time of the call."""
+        if offered is None:
+            offered = jnp.ones(items.shape[:2], bool)
+        t0 = time.perf_counter()
+        out = self._jstep(state, items, ts, jnp.asarray(offered, bool),
+                          jnp.asarray(self._healthy),
+                          jnp.asarray(self._budget, jnp.int32))
+        self.last_step_seconds = time.perf_counter() - t0
+        return out

@@ -34,10 +34,28 @@ import jax.numpy as jnp
 from repro.core import routing as RT
 
 
-def fleet_watermark(max_ts: jnp.ndarray, axis_name) -> jnp.ndarray:
+def fleet_watermark(max_ts: jnp.ndarray, axis_name,
+                    healthy: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fleet watermark = min over shards of the per-shard max event
-    time.  Lagging shards hold back window close everywhere."""
-    return jax.lax.pmin(max_ts, axis_name)
+    time.  Lagging shards hold back window close everywhere.
+
+    ``healthy``: optional per-shard bool (this shard's flag, a traced
+    operand from the host control plane).  Flagged shards are excluded
+    from the min — a stalled shard can no longer freeze window close
+    fleet-wide; its own late records are counted (``late_excluded``)
+    and processed against its local watermark, never silently dropped.
+    If *no* shard is healthy the mask is ignored (the plain min is the
+    only consistent reference left)."""
+    if healthy is None:
+        return jax.lax.pmin(max_ts, axis_name)
+    # one stacked pmin, not three collectives: [masked min, plain min,
+    # 0-iff-any-healthy] — the health path must not break the fleet
+    # tick's one-collective-per-exchange discipline
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, max_ts.dtype)
+    h = healthy.astype(max_ts.dtype)
+    vec = jnp.stack([jnp.where(healthy, max_ts, big), max_ts, 1.0 - h])
+    m = jax.lax.pmin(vec, axis_name)
+    return jnp.where(m[2] < 0.5, m[0], m[1])
 
 
 class FederationStats(NamedTuple):
@@ -51,8 +69,8 @@ class FederationStats(NamedTuple):
 
 def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
                          run_core: Callable, *, axis_name,
-                         num_shards: int, num_core: int, core_budget: int,
-                         capacity: int
+                         num_shards: int, num_core: int, core_budget,
+                         capacity: int, core_slots: int | None = None
                          ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                                     FederationStats]:
     """Route escalated records to the core sub-mesh, process under the
@@ -64,10 +82,21 @@ def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
     per-(src, dest) slot count of the exchange buffer (>=
     ceil(N / num_core) guarantees no send-side shed).
 
+    ``core_budget`` may be a *traced* int32 scalar: the budget test and
+    the overflow counter are data, not shape.  ``core_slots`` (static,
+    defaults to ``core_budget`` which must then be a Python int) is the
+    shape ceiling — the per-core-rank compact batch holds
+    ``ceil(core_slots / num_core)`` rows, so any budget value in
+    ``[0, core_slots]`` runs on the same trace and an elastic resize
+    between ticks recompiles nothing.
+
     Returns ([N, R] core outputs, [N, F] core features, [N] bool
     processed, stats).  ``processed`` marks the records that actually
     got core compute; the rest keep their edge results.
     """
+    if core_slots is None:
+        core_slots = int(core_budget)
+    core_budget = jnp.asarray(core_budget, jnp.int32)
     n, r = records.shape
     esc = escalate.astype(bool)
     my_count = jnp.sum(esc.astype(jnp.int32))
@@ -90,7 +119,7 @@ def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
     # compact the under-budget records: flat (src, slot) order is
     # ascending global slot, so "first core_budget fleet-wide" is
     # exactly what survives, deterministically
-    c_core = max(1, -(-core_budget // num_core))
+    c_core = max(1, -(-core_slots // num_core))
     full_out, full_feats, done_mask = RT.compact_apply(
         run_core, recv.reshape(num_shards * capacity, r),
         under.reshape(-1), c_core)

@@ -1,0 +1,282 @@
+"""Deterministic fault-injection harness for the fleet control plane.
+
+Runs in a subprocess with 8 forced host devices (same pattern as
+``test_fleet.py``).  A ``FaultSchedule`` stalls shard ``i`` at tick
+``t`` and recovers it at tick ``t'``: during the stall the shard's
+producer batches buffer upstream (offered mask False) and its synthetic
+step wall-time balloons; after recovery the backlog drains one batch
+per tick (the catch-up path), then extra drain ticks flush the tail.
+
+What the harness pins:
+
+* the fleet watermark keeps advancing while the shard is stalled (the
+  straggler-aware health mask excludes it from the ``pmin``) — and a
+  control-free baseline shows the watermark *does* freeze without it;
+* every backlog record the fleet reference had moved past is counted
+  in ``late_excluded`` (exact expected count recomputed host-side from
+  the recorded per-tick watermarks), and none are dropped
+  (``items_late == 0`` everywhere);
+* after recovery the faulted shard's emitted windows — aggregates,
+  consequences, pipeline outputs — equal the healthy-fleet oracle's,
+  and healthy shards match the oracle tick for tick;
+* the whole degraded run stays on ONE trace (health mask and budget
+  are operands, not shapes);
+* a ``core_budget`` resize inside the static slot ceiling changes
+  results only where the budget binds, costs zero re-traces, and
+  growing past the ceiling costs exactly one (``trace_count <= 1 +
+  resizes``);
+* the controller's elastic-budget loop grows under escalation pressure
+  and shrinks when idle.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT = textwrap.dedent("""
+    import collections
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    jax.config.update("jax_threefry_partitionable", True)
+    jax.config.update("jax_default_matmul_precision", "highest")
+
+    from repro.core import pipeline as pipe
+    from repro.core import rules
+    from repro.runtime.elastic import ElasticBudget
+    from repro.runtime.straggler import StragglerDetector
+    from repro.stream import StreamConfig
+    from repro.stream.fleet import (Fault, FaultInjector, FaultSchedule,
+                                    FleetConfig, FleetController,
+                                    FleetExecutor)
+
+    D, BATCH, E = 3, 32, 8
+    LATENESS = 4.0
+    edge_fn = lambda p, b: (b * 1.5, b[:, :5])
+    core_fn = lambda p, b: (b + 100.0, b[:, :5])
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 1.0, rules.C_SEND_CORE,
+                             priority=2)])
+    # tumbling windows: no cross-batch carry, so a stall gap cannot
+    # leak partially-masked boundary windows into the oracle diff
+    scfg = StreamConfig(micro_batch=BATCH, window=16, stride=16,
+                        capacity=4 * BATCH, lateness=LATENESS)
+
+    def make_fleet(budget, budget_max=None):
+        return FleetExecutor(
+            FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                        core_budget=budget, core_budget_max=budget_max),
+            engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine))
+
+    T, SHARD = 14, 3
+    sched = FaultSchedule([Fault(shard=SHARD, start=4, end=8)])
+    STALL = sched.faults[0].end - sched.faults[0].start       # 4 ticks
+
+    rng = np.random.default_rng(0)
+    stream = []                         # the (healthy) ground-truth feed
+    for t in range(T):
+        items = rng.standard_normal((E, BATCH, D)).astype(np.float32)
+        items[:, :, 0] += (t % 3 == 0) * 1.5   # periodic hot regime
+        ts = np.tile(t * BATCH + np.arange(BATCH, dtype=np.float32),
+                     (E, 1))
+        stream.append((items, ts))
+
+    def collect(out, e, store):
+        emit = np.asarray(out.window_count[e]) > 0
+        if emit.any():
+            store["agg"].append(np.asarray(out.aggregates[e])[emit])
+            store["cons"].append(np.asarray(out.consequence[e])[emit])
+            store["outs"].append(np.asarray(out.outputs[e])[emit])
+
+    def cat(store):
+        return {k: np.concatenate(v) if v else np.zeros((0,))
+                for k, v in store.items()}
+
+    # --- healthy-fleet oracle (budget ample: no core contention) -------
+    orc = make_fleet(64)
+    ostate = orc.init_state(D)
+    oracle = [collections.defaultdict(list) for _ in range(E)]
+    for t in range(T):
+        items, ts = stream[t]
+        ostate, out = orc.step(ostate, jnp.asarray(items), jnp.asarray(ts))
+        for e in range(E):
+            collect(out, e, oracle[e])
+    oracle = [cat(o) for o in oracle]
+
+    # --- control-free baseline: the stall freezes the fleet watermark --
+    base = make_fleet(64)
+    bstate = base.init_state(D)
+    for t in range(8):
+        items, ts = stream[t]
+        offered = np.ones((E, BATCH), bool)
+        if t in range(4, 8):
+            offered[SHARD] = False
+        bstate, _ = base.step(bstate, jnp.asarray(items), jnp.asarray(ts),
+                              offered=jnp.asarray(offered))
+    frozen = float(np.asarray(bstate.watermark)[0])
+    assert frozen == 4 * BATCH - 1, frozen     # stuck at the stall point
+    print("FROZEN_OK", frozen)
+
+    # --- faulted run with the control plane ----------------------------
+    fx = make_fleet(64)
+    ctl = FleetController(
+        fx,
+        budget_policy=ElasticBudget(min_budget=64, max_budget=64),
+        wall_detector=StragglerDetector(E, window=2, threshold=3.0,
+                                        patience=1))
+    state = fx.init_state(D)
+    faulted = [collections.defaultdict(list) for _ in range(E)]
+    inj = FaultInjector(sched)
+    wm_log, mask_log, offer_log = [], [], []
+    for t in range(T + STALL + 3):
+        drain = t >= T
+        if drain:
+            base = (np.zeros((E, BATCH, D), np.float32),
+                    np.zeros((E, BATCH), np.float32))
+        else:
+            base = stream[t]
+        items, ts, offered = inj.inject(t, *base, fresh=not drain)
+        mask_log.append(fx.health)                 # mask used THIS tick
+        offer_log.append((offered[SHARD].any(), ts[SHARD].copy()))
+        state, out = fx.step(state, jnp.asarray(items), jnp.asarray(ts),
+                             offered=jnp.asarray(offered))
+        dec = ctl.tick(state, step_times=sched.stall_time(t, E))
+        wm_log.append(float(np.asarray(state.watermark)[0]))
+        for e in range(E):
+            collect(out, e, faulted[e])
+    assert inj.pending == 0                    # fully drained
+    faulted = [cat(f) for f in faulted]
+    md = state.metrics.as_dict()
+
+    # 1. watermark keeps advancing through the stall (monotone, and at
+    #    full healthy speed from the tick after detection onward)
+    assert all(b >= a for a, b in zip(wm_log, wm_log[1:])), wm_log
+    # wm used at tick t is the healthy min of the previous tick's
+    # maxima: full speed at every tick despite the stall (the baseline
+    # above froze at 4 * BATCH - 1 from tick 4 on)
+    for t in range(1, T):
+        assert wm_log[t] == t * BATCH - 1, (t, wm_log)
+    assert max(wm_log) == T * BATCH - 1
+
+    # 2. every record the fleet reference moved past is in
+    #    late_excluded — exact host-side recomputation — and nothing
+    #    was dropped as late anywhere
+    expected = 0
+    for t, (any_offered, shard_ts) in enumerate(offer_log):
+        if any_offered and not mask_log[t][SHARD]:
+            expected += int((shard_ts < wm_log[t] - LATENESS).sum())
+    assert md["late_excluded"][SHARD] == expected > 0, \\
+        (md["late_excluded"], expected)
+    assert all(md["late_excluded"][e] == 0 for e in range(E)
+               if e != SHARD)
+    assert md["shard"]["items_late"] == [0] * E
+    # the stalled shard really was excluded while catching up
+    assert any(not m[SHARD] for m in mask_log)
+
+    # 3. the shard was re-admitted after catching up
+    assert mask_log[-1][SHARD], [m[SHARD] for m in mask_log]
+
+    # 4. post-recovery equality with the healthy-fleet oracle
+    for e in range(E):
+        assert faulted[e]["agg"].shape == oracle[e]["agg"].shape, e
+        np.testing.assert_allclose(faulted[e]["agg"], oracle[e]["agg"],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(e))
+        np.testing.assert_array_equal(faulted[e]["cons"],
+                                      oracle[e]["cons"], err_msg=str(e))
+        np.testing.assert_allclose(faulted[e]["outs"], oracle[e]["outs"],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(e))
+
+    # 5. the whole degraded run is one XLA executable
+    assert fx.trace_count == 1, fx.trace_count
+    assert fx.trace_count <= ctl.max_trace_count
+    print("FAULT_OK", md["late_excluded"][SHARD])
+
+    # --- budget-resize regression: same results, bounded re-traces -----
+    E2 = 4
+    scfg2 = StreamConfig(micro_batch=16, window=16, stride=16,
+                         capacity=64, lateness=4.0)
+    eng2 = rules.RuleEngine([
+        rules.threshold_rule("always", 0, ">=", -1e9, rules.C_SEND_CORE)])
+    feed2 = []
+    for t in range(7):
+        it = rng.standard_normal((E2, 16, D)).astype(np.float32)
+        t2 = np.tile(t * 16 + np.arange(16, dtype=np.float32), (E2, 1))
+        feed2.append((it, t2))
+
+    def run2(resize_at=None, grow_at=None):
+        fx2 = FleetExecutor(
+            FleetConfig(stream=scfg2, num_shards=E2, num_core=2,
+                        core_budget=6, core_budget_max=16),
+            eng2, pipe.two_tier_pipeline(edge_fn, core_fn, eng2))
+        st = fx2.init_state(D)
+        outs = []
+        for t, (it, t2) in enumerate(feed2):
+            if t == resize_at:
+                fx2.set_core_budget(12)      # within slots: no re-trace
+            if t == grow_at:
+                fx2.set_core_budget(24)      # past slots: one re-trace
+            st, o = fx2.step(st, jnp.asarray(it), jnp.asarray(t2))
+            outs.append(np.asarray(o.outputs))
+        return fx2, outs
+
+    # 4 escalations/step fit budget 6, 12 and 24: results must agree
+    _, ref = run2()
+    fx_r, got = run2(resize_at=3)
+    for a, b in zip(ref, got):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    assert fx_r.trace_count == 1, fx_r.trace_count   # operand, not shape
+    fx_g, got_g = run2(resize_at=2, grow_at=5)
+    for a, b in zip(ref, got_g):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    assert fx_g.trace_count == 2, fx_g.trace_count   # <= 1 + resizes (2)
+    print("RESIZE_OK")
+
+    # --- elastic budget closes the loop under pressure then idle -------
+    eng3 = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 1.0, rules.C_SEND_CORE)])
+    scfg3 = StreamConfig(micro_batch=64, window=16, stride=16,
+                         capacity=256, lateness=4.0)
+    fx3 = FleetExecutor(
+        FleetConfig(stream=scfg3, num_shards=4, num_core=2,
+                    core_budget=4, core_budget_max=8),
+        eng3, pipe.two_tier_pipeline(edge_fn, core_fn, eng3))
+    ctl3 = FleetController(
+        fx3, budget_policy=ElasticBudget(min_budget=2, max_budget=32,
+                                         patience=1))
+    st3 = fx3.init_state(D)
+    budgets = []
+    t0 = 0.0
+    for t in range(10):
+        it = rng.standard_normal((4, 64, D)).astype(np.float32)
+        if t < 5:
+            it[:, :, 0] += 2.0               # pressure: all windows hot
+        else:
+            it[:, :, 0] -= 2.0               # idle: none escalate
+        t3 = np.tile(t0 + np.arange(64, dtype=np.float32), (4, 1))
+        t0 += 64
+        st3, _ = fx3.step(st3, jnp.asarray(it), jnp.asarray(t3))
+        budgets.append(ctl3.tick(st3).budget)
+    assert max(budgets) > 4, budgets            # grew under pressure
+    assert budgets[-1] < max(budgets), budgets  # shrank when idle
+    assert fx3.trace_count <= ctl3.max_trace_count <= 1 + ctl3.resizes, \\
+        (fx3.trace_count, ctl3.resizes)
+    assert ctl3._retraces >= 1                  # ceiling growth exercised
+    print("ELASTIC_OK", budgets)
+""")
+
+
+def test_fleet_fault_injection(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = tmp_path / "fleet_faults.py"
+    script.write_text(_SCRIPT)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "FROZEN_OK" in out.stdout
+    assert "FAULT_OK" in out.stdout
+    assert "RESIZE_OK" in out.stdout
+    assert "ELASTIC_OK" in out.stdout

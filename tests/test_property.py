@@ -12,6 +12,7 @@ from repro.core import routing, sfc
 from repro.data import create, dequeue, enqueue, size
 from repro.kernels.armatch import armatch, armatch_ref
 from repro.runtime.compression import dequantize, quantize
+from repro.runtime.straggler import StragglerDetector
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -125,6 +126,67 @@ def test_ringbuffer_fifo_property(ops):
             rb, out, valid = dequeue(rb, n)
             popped += [int(v) for v in np.asarray(out[np.asarray(valid), 0])]
     assert popped == pushed[: len(popped)]
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       num_ranks=st.integers(2, 16),
+       steps=st.integers(1, 12))
+def test_straggler_flags_permutation_equivariant(seed, num_ranks, steps):
+    """Relabeling ranks relabels the flags: the detector sees only the
+    timing distribution, never the rank ids (the fleet control plane
+    relies on this — shard numbering is arbitrary)."""
+    rng = np.random.default_rng(seed)
+    times = rng.gamma(2.0, 1.0, (steps, num_ranks))
+    times[rng.random((steps, num_ranks)) < 0.15] = 0.0   # missing samples
+    if rng.random() < 0.5:
+        times[:, rng.integers(num_ranks)] *= 25.0        # maybe a straggler
+    perm = rng.permutation(num_ranks)
+    d1 = StragglerDetector(num_ranks, window=6, patience=2)
+    d2 = StragglerDetector(num_ranks, window=6, patience=2)
+    for t in range(steps):
+        d1.observe(times[t])
+        d2.observe(times[t][perm])
+    s1 = set(d1.stragglers())
+    assert set(d2.stragglers()) == {j for j in range(num_ranks)
+                                    if perm[j] in s1}
+
+
+@SET
+@given(value=st.floats(0.0, 1e3),
+       floor=st.floats(0.0, 1e2),
+       num_ranks=st.integers(1, 16),
+       steps=st.integers(1, 10))
+def test_straggler_never_fires_on_uniform_timings(value, floor,
+                                                 num_ranks, steps):
+    """Uniform timings — including all-zero warm-ups, the degenerate
+    global_med == 0 case — never produce a straggler, whatever the
+    absolute floor."""
+    det = StragglerDetector(num_ranks, window=4, patience=1, floor=floor)
+    for _ in range(steps):
+        assert det.observe(np.full(num_ranks, value)) == []
+    assert det.stragglers() == []
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       num_ranks=st.integers(1, 16),
+       data=st.data())
+def test_straggler_reassignment_targets_healthy(seed, num_ranks, data):
+    """The backup plan never re-executes a shard on another straggler,
+    covers every straggler when a healthy rank exists, and degrades to
+    an empty plan when none does."""
+    stragglers = sorted(data.draw(st.sets(
+        st.integers(0, num_ranks - 1), max_size=num_ranks)))
+    det = StragglerDetector(num_ranks, window=4)
+    det.observe(np.random.default_rng(seed).gamma(2.0, 1.0, num_ranks))
+    plan = det.reassignment(stragglers)
+    assert all(t not in stragglers and 0 <= t < num_ranks
+               for t in plan.values())
+    if len(stragglers) == num_ranks or not stragglers:
+        assert plan == {}
+    else:
+        assert sorted(plan) == stragglers
 
 
 @SET

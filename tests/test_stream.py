@@ -325,6 +325,28 @@ def test_executor_core_capacity_overflow_accounting(rng):
     assert int(m.core_overflow) == 4 * 3
 
 
+def test_executor_dynamic_core_budget(rng):
+    """set_core_budget is a traced operand: shrinking it below the
+    static core_capacity binds (fewer windows get core compute, the
+    rest keep edge results and count as overflow) with zero re-traces;
+    a budget at the capacity reproduces the static behavior."""
+    ex, state = _make_executor(core_capacity=3, threshold=-100.0)
+    state, out, t0 = _feed(ex, state, rng, 2)
+    ex.set_core_budget(1)                    # binds: 4 windows, 1 slot
+    state, out, t0 = _feed(ex, state, rng, 3, t0=t0)
+    m = state.metrics
+    # 2 steps at budget==capacity (1 overflow each) + 3 steps at
+    # budget 1 (3 overflow each): the operand changed, the trace didn't
+    assert int(m.core_overflow) == 2 * 1 + 3 * 3
+    assert ex.trace_count == 1
+    cored = (np.asarray(out.outputs)[:, 5:] > 50).all(axis=1)
+    assert cored.sum() == 1                  # exactly the budget
+    ex.set_core_budget(3)                    # back to the static cap
+    state, out, _ = _feed(ex, state, rng, 1, t0=t0)
+    assert (np.asarray(out.outputs)[:, 5:] > 50).all(axis=1).sum() == 3
+    assert ex.trace_count == 1
+
+
 def test_pipeline_overflow_keeps_consequence_and_skips_rules():
     """Core-capacity overflow items must keep their SEND_CORE
     consequence — the gather's zeroed features must not re-trigger

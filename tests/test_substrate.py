@@ -146,6 +146,33 @@ def test_straggler_detection_patience():
     assert 5 in plan and plan[5] != 5
 
 
+def test_straggler_zero_median_guard():
+    """All-zero warm-up timings used to degenerate the threshold test
+    (global_med == 0): zeros are missing measurements, not a baseline.
+    They must neither flag anyone nor dilute the medians so a real
+    straggler stays invisible once signal arrives."""
+    det = StragglerDetector(4, window=8, threshold=1.5, patience=2)
+    for _ in range(6):                       # warm-up: no measurements
+        assert det.observe(np.zeros(4)) == []
+    assert det.stragglers() == []
+    flagged = []
+    for _ in range(3):                       # real signal, rank 2 slow
+        flagged += det.observe(np.array([0.1, 0.1, 0.9, 0.1]))
+    # zero-diluted medians would keep the comparison always-False;
+    # with zeros masked out the straggler is caught at normal patience
+    assert flagged == [2]
+    assert det.stragglers() == [2]
+
+    # absolute floor: detection against a ~zero baseline (the
+    # event-time-lag use: healthy ranks legitimately measure ~0 lag,
+    # fed as epsilon — a real measurement, not a missing one — so the
+    # relative cut stays tiny and the floor decides)
+    det2 = StragglerDetector(4, window=4, patience=2, floor=1.0)
+    for _ in range(3):
+        det2.observe(np.array([1e-9, 1e-9, 1e-9, 5.0]))
+    assert det2.stragglers() == [3]
+
+
 # ---------------------------------------------------------------- compression
 
 def test_error_feedback_accumulates():
