@@ -14,6 +14,15 @@ straggler-aware watermark through a scripted mid-run stall
 budget trajectory, the ``late_excluded`` accounting, and the re-trace
 bound (``trace_count <= 1 + resizes``, asserted).
 
+``--churn`` runs the membership-churn smoke: a shard leaves the fleet
+mid-run, its stream replays on the ``reassignment``-chosen backup, a
+joiner takes the slot back, and the fleet then truly re-meshes to one
+fewer device.  Asserted end-to-end: per-stream output equals a
+healthy-fleet oracle, zero records dropped, ``items_replayed`` matches
+an exact host-side recomputation, and ``trace_count <= 1 + retraces +
+remeshes`` (the leave/join itself stays on ONE trace — membership is
+an operand).
+
 The measurement runs in a subprocess: the forced host device count must
 be set before jax first initializes, and the parent harness has long
 since locked in its own platform.
@@ -29,11 +38,12 @@ WARMUP = 5
 SHARD_COUNTS = (1, 4, 8)
 
 
-def bench(faults: bool = False):
+def bench(faults: bool = False, churn: bool = False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["JAX_PLATFORMS"] = "cpu"
-    args = ["--child"] + (["--faults"] if faults else [])
+    args = ["--child"] + (["--faults"] if faults else []) \
+        + (["--churn"] if churn else [])
     out = subprocess.run([sys.executable, "-m", "benchmarks.fleet"] + args,
                          env=env, capture_output=True,
                          text=True, timeout=900)
@@ -113,28 +123,18 @@ def _child():
             f";traces={ex.trace_count}")
 
 
-def _child_faults():
-    """Degraded-fleet smoke: stall one shard mid-run under an elastic
-    budget and report what the control plane did about it."""
-    import time
-
-    import jax
+def _hot_fixture():
+    """The degraded/churned children's shared workload: tanh core
+    stage, hot-mean escalation rule, tumbling 64/64 stream config
+    (tumbling: a stall gap or a foreign-slot replay cannot smear
+    window boundaries).  One copy, so --faults and --churn measure the
+    same pipeline.  Returns (engine, scfg, make_pipeline)."""
     import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks.common import row
     from repro.core import pipeline as pipe
     from repro.core import rules
-    from repro.runtime.elastic import ElasticBudget
-    from repro.runtime.straggler import StragglerDetector
     from repro.stream import StreamConfig
-    from repro.stream.fleet import (Fault, FaultInjector, FaultSchedule,
-                                    FleetConfig, FleetController,
-                                    FleetExecutor)
-
-    E, steps = 8, 60
-    stall = Fault(shard=2, start=20, end=32)
-    sched = FaultSchedule([stall])
 
     def edge_fn(p, batch):
         return batch, batch[:, :5]
@@ -151,14 +151,40 @@ def _child_faults():
     engine = rules.RuleEngine([
         rules.threshold_rule("hot_mean", 0, ">=", 0.25,
                              rules.C_SEND_CORE, priority=1)])
-    # tumbling windows: the stall gap cannot smear window boundaries
     scfg = StreamConfig(micro_batch=BATCH, window=64, stride=64,
                         capacity=4 * BATCH, lateness=64.0)
+
+    def make_pipeline():
+        return pipe.two_tier_pipeline(edge_fn, core_fn, engine,
+                                      core_params=core_p)
+
+    return engine, scfg, make_pipeline
+
+
+def _child_faults():
+    """Degraded-fleet smoke: stall one shard mid-run under an elastic
+    budget and report what the control plane did about it."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.runtime.elastic import ElasticBudget
+    from repro.runtime.straggler import StragglerDetector
+    from repro.stream.fleet import (Fault, FaultInjector, FaultSchedule,
+                                    FleetConfig, FleetController,
+                                    FleetExecutor)
+
+    E, steps = 8, 60
+    stall = Fault(shard=2, start=20, end=32)
+    sched = FaultSchedule([stall])
+    engine, scfg, make_pipeline = _hot_fixture()
     ex = FleetExecutor(
         FleetConfig(stream=scfg, num_shards=E, num_core=2,
                     core_budget=4, core_budget_max=16),
-        engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine,
-                                       core_params=core_p))
+        engine, make_pipeline())
     ctl = FleetController(
         ex,
         budget_policy=ElasticBudget(min_budget=2, max_budget=64,
@@ -176,7 +202,7 @@ def _child_faults():
             base[:, :, 0] += 0.5           # alternating hot regime
         ts = np.tile(t0 + np.arange(BATCH, dtype=np.float32), (E, 1))
         t0 += BATCH
-        base, ts, offered = inj.inject(i, base, ts)
+        base, ts, offered, _ = inj.inject(i, base, ts)
         t = time.perf_counter()
         state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
                              offered=jnp.asarray(offered))
@@ -189,7 +215,7 @@ def _child_faults():
     # run ends with every record processed, not quietly abandoned
     i = steps
     while inj.pending:
-        base, ts, offered = inj.inject(
+        base, ts, offered, _ = inj.inject(
             i, np.zeros((E, BATCH, D), np.float32),
             np.zeros((E, BATCH), np.float32), fresh=False)
         state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
@@ -213,8 +239,153 @@ def _child_faults():
         f";traces={ex.trace_count}")
 
 
+def _child_churn():
+    """Membership-churn smoke: a shard leaves mid-run, its stream
+    replays on the reassignment-chosen backup, a joiner restores the
+    slot, and the fleet then truly re-meshes — all verified against a
+    healthy-fleet oracle, with latency reported per phase."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.runtime.elastic import ElasticBudget
+    from repro.stream.fleet import (Churn, FaultInjector, FaultSchedule,
+                                    FleetConfig, FleetController,
+                                    FleetExecutor)
+
+    E, steps = 8, 60
+    event = Churn(shard=3, leave=20, join=34)
+    sched = FaultSchedule(churn=[event])
+    engine, scfg, make_pipeline = _hot_fixture()
+    budget = 4 * E                     # ample + pinned: the oracle has no
+                                       # controller, so an elastic resize
+                                       # would be a semantic difference
+
+    def make_fleet():
+        return FleetExecutor(
+            FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                        core_budget=budget),
+            engine, make_pipeline())
+
+    def feed(i):
+        r = np.random.default_rng(1000 + i)
+        base = r.standard_normal((E, BATCH, D)).astype(np.float32)
+        if (i // 10) % 2:
+            base[:, :, 0] += 0.5       # alternating hot regime
+        ts = np.tile(i * BATCH + np.arange(BATCH, dtype=np.float32),
+                     (E, 1))
+        return base, ts
+
+    def collect(out, e, store):
+        emit = np.asarray(out.window_count[e]) > 0
+        if emit.any():
+            store.append(np.asarray(out.aggregates[e])[emit])
+
+    orc = make_fleet()
+    ostate = orc.init_state(D)
+    oracle = [[] for _ in range(E)]
+    for i in range(steps):
+        base, ts = feed(i)
+        ostate, out = orc.step(ostate, jnp.asarray(base), jnp.asarray(ts))
+        for e in range(E):
+            collect(out, e, oracle[e])
+
+    ex = make_fleet()
+    ctl = FleetController(
+        ex, budget_policy=ElasticBudget(min_budget=budget,
+                                        max_budget=budget))
+    state = ex.init_state(D)
+    inj = FaultInjector(sched)
+    churned = [[] for _ in range(E)]
+    backups, lat, rep_expected = {}, [], 0
+    for i in range(steps):
+        if i == event.leave:
+            backup = ctl.leave(event.shard)
+            assert backup is not None
+            backups = {event.shard: backup}
+        if i == event.join:
+            ctl.join(event.shard)
+        base, ts = feed(i)
+        base, ts, offered, replay = inj.inject(i, base, ts,
+                                               backups=backups)
+        origin = inj.origin.copy()
+        rep_expected += int(offered[replay].sum())
+        t = time.perf_counter()
+        state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
+                             offered=jnp.asarray(offered),
+                             replay=jnp.asarray(replay))
+        if i >= WARMUP:
+            lat.append(time.perf_counter() - t)
+        ctl.tick(state, step_times=sched.stall_time(i, E))
+        for e in range(E):
+            if origin[e] >= 0:
+                collect(out, e, churned[int(origin[e])])
+    # unmeasured drain: flush the backup's displaced backlog
+    i = steps
+    while inj.pending:
+        base, ts, offered, replay = inj.inject(
+            i, np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32), fresh=False,
+            backups=backups)
+        origin = inj.origin.copy()
+        state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
+                             offered=jnp.asarray(offered),
+                             replay=jnp.asarray(replay))
+        ctl.tick(state, step_times=sched.stall_time(i, E))
+        for e in range(E):
+            if origin[e] >= 0:
+                collect(out, e, churned[int(origin[e])])
+        i += 1
+    m = state.metrics.as_dict()
+    # churn end-to-end, asserted: oracle equality per stream, nothing
+    # dropped, replayed == exact recomputation, ONE trace for the whole
+    # leave -> replay -> join arc
+    for e in range(E):
+        a = np.concatenate(churned[e]) if churned[e] else np.zeros((0,))
+        b = np.concatenate(oracle[e]) if oracle[e] else np.zeros((0,))
+        assert a.shape == b.shape, (e, a.shape, b.shape)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"stream {e}")
+    assert sum(m["shard"]["items_replayed"]) == rep_expected > 0, \
+        (m["shard"]["items_replayed"], rep_expected)
+    assert sum(m["shard"]["items_late"]) == 0, "churn dropped records"
+    assert ex.trace_count == 1, f"membership retraced: {ex.trace_count}"
+
+    # true re-mesh: the departed device never comes back — shrink to 7
+    devs = [d for j, d in enumerate(jax.devices()) if j != event.shard]
+    keep = [j for j in range(E) if j != event.shard]
+    state, payload = ctl.remesh(state, devs, keep=keep)
+    base, ts = feed(steps)
+    t = time.perf_counter()
+    state, out = ex.step(state, jnp.asarray(base[keep]),
+                         jnp.asarray(ts[keep]))
+    remesh_lat = time.perf_counter() - t
+    ctl.tick(state, step_times=np.full(E - 1, 0.1))
+    assert ex.trace_count == 2 <= ctl.max_trace_count, \
+        (ex.trace_count, ctl.max_trace_count)
+
+    lat = np.asarray(lat)
+    row("fleet/churn_step", float(np.median(lat) * 1e6),
+        f"items_per_s={E * BATCH / np.median(lat):.0f}")
+    row("fleet/churn_p99", float(np.percentile(lat, 99) * 1e6),
+        f"replayed={sum(m['shard']['items_replayed'])}"
+        f";late_excluded={sum(m['late_excluded'])}"
+        f";traces={ex.trace_count}"
+        f";remeshes={ex.remeshes}")
+    row("fleet/churn_remesh_step", float(remesh_lat * 1e6),
+        f"shards={E}->{E - 1};retrace=1")
+
+
 if __name__ == "__main__":
     if "--child" in sys.argv:
-        _child_faults() if "--faults" in sys.argv else _child()
+        if "--churn" in sys.argv:
+            _child_churn()
+        elif "--faults" in sys.argv:
+            _child_faults()
+        else:
+            _child()
     else:
-        bench(faults="--faults" in sys.argv)
+        bench(faults="--faults" in sys.argv, churn="--churn" in sys.argv)

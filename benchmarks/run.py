@@ -21,6 +21,8 @@ SUITES = {
     "fleet": fleet.bench,              # sharded edge fleet, E in {1,4,8}
     "fleet_faults":                    # degraded fleet under control plane
         lambda: fleet.bench(faults=True),
+    "fleet_churn":                     # leave -> backup replay -> join,
+        lambda: fleet.bench(churn=True),   # then a true re-mesh
 }
 
 

@@ -22,6 +22,15 @@ through the catch-up path on recovery (counted in ``late_excluded``,
 never dropped), and once the backlog drains within tolerance the
 bridge rejoins the ``pmin`` automatically.
 
+Fleet *churn* rides the same loop: bridge 4's RP is decommissioned
+outright mid-run (``Churn``) — ``FleetController.leave`` flips its
+membership flag (a traced operand, zero recompiles) and picks the
+backup bridge that re-runs its buffered tuple batches
+(``StragglerDetector.reassignment``); the replayed records are
+lateness-exempt and counted in ``items_replayed``.  When a
+replacement RP joins the slot, fresh delivery resumes there — the
+whole leave -> replay -> join arc stays on ONE trace.
+
     PYTHONPATH=src python examples/fleet_stream_analytics.py
 """
 import os
@@ -38,7 +47,7 @@ from repro.core import rules                # noqa: E402
 from repro.runtime.elastic import ElasticBudget            # noqa: E402
 from repro.runtime.straggler import StragglerDetector      # noqa: E402
 from repro.stream import StreamConfig       # noqa: E402
-from repro.stream.fleet import (Fault, FaultInjector,      # noqa: E402
+from repro.stream.fleet import (Churn, Fault, FaultInjector,  # noqa: E402
                                 FaultSchedule, FleetConfig,
                                 FleetController, FleetExecutor)
 
@@ -50,6 +59,7 @@ QUAKE = range(12, 18)          # steps during which the burst happens
 HIT = (2, 3, 4, 5)             # bridges in the affected region
 CORE_BUDGET = 6                # initial fleet-wide core windows / tick
 DEAD = Fault(shard=6, start=20, end=26)     # bridge 6's uplink dies
+GONE = Churn(shard=4, leave=22, join=30)    # bridge 4's RP decommissioned
 
 
 def edge_fn(params, batch):
@@ -64,7 +74,11 @@ def core_fn(params, batch):
 
 
 def main():
-    scfg = StreamConfig(micro_batch=BATCH, window=32, stride=16,
+    # tumbling windows: bridge 4's batches replay on a foreign bridge,
+    # and batch-granular replay needs stride == window (the executor
+    # enforces it — a sliding carry would smear two bridges' tuples
+    # into one window; see stream README "Shard churn")
+    scfg = StreamConfig(micro_batch=BATCH, window=32, stride=32,
                         capacity=8 * BATCH, lateness=16.0)
     engine = rules.RuleEngine([
         rules.threshold_rule("burst", 1, ">=", 3.0, rules.C_SEND_CORE,
@@ -86,13 +100,22 @@ def main():
                                     patience=2),
         wall_detector=StragglerDetector(E, window=3, threshold=3.0,
                                         patience=2))
-    sched = FaultSchedule([DEAD])
+    sched = FaultSchedule([DEAD], churn=[GONE])
     inj = FaultInjector(sched)
     state = ex.init_state(D)
 
     rng = np.random.default_rng(42)
-    t0 = 0.0
+    t0, backups = 0.0, {}
     for step in range(STEPS):
+        if step == GONE.leave:
+            backup = ctl.leave(GONE.shard)
+            backups = {GONE.shard: backup}
+            print(f"step {step:2d}: bridge {GONE.shard} decommissioned; "
+                  f"bridge {backup} replays its buffered batches")
+        if step == GONE.join:
+            ctl.join(GONE.shard)
+            print(f"step {step:2d}: replacement RP joined at slot "
+                  f"{GONE.shard}")
         accel = np.abs(rng.standard_normal((E, BATCH))) \
             .astype(np.float32) * 0.5
         if step in QUAKE:
@@ -106,10 +129,13 @@ def main():
         ts[7] -= BATCH
         t0 += BATCH
         # stalled uplink: tuples buffer at the bridge; recovered:
-        # backlog drains oldest-first while fresh batches keep queueing
-        items, ts, offered = inj.inject(step, items, ts)
+        # backlog drains oldest-first while fresh batches keep queueing;
+        # decommissioned: the stream replays on the backup's uplink
+        items, ts, offered, replay = inj.inject(step, items, ts,
+                                                backups=backups)
         state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts),
-                             offered=jnp.asarray(offered))
+                             offered=jnp.asarray(offered),
+                             replay=jnp.asarray(replay))
         dec = ctl.tick(state, step_times=sched.stall_time(step, E))
         esc = np.asarray(out.escalated)             # [E, NW]
         if esc.any() or dec.stragglers or dec.resized:
@@ -128,11 +154,13 @@ def main():
     step, quiet = STEPS, 0
     while inj.pending or quiet < 3:
         quiet = 0 if inj.pending else quiet + 1
-        items, ts, offered = inj.inject(
+        items, ts, offered, replay = inj.inject(
             step, np.zeros((E, BATCH, D), np.float32),
-            np.zeros((E, BATCH), np.float32), fresh=False)
+            np.zeros((E, BATCH), np.float32), fresh=False,
+            backups=backups)
         state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts),
-                             offered=jnp.asarray(offered))
+                             offered=jnp.asarray(offered),
+                             replay=jnp.asarray(replay))
         dec = ctl.tick(state, step_times=sched.stall_time(step, E))
         step += 1
     print(f"drained bridge {DEAD.shard}'s backlog by step {step}; "
@@ -150,6 +178,10 @@ def main():
     print(f"bridge {DEAD.shard} catch-up records past the fleet "
           f"watermark: {m['late_excluded'][DEAD.shard]} "
           f"(late-dropped: 0 — counted, not lost)")
+    rep = m["shard"]["items_replayed"]
+    print(f"bridge {GONE.shard}'s stream while decommissioned: "
+          f"{sum(rep)} tuples replayed on bridge "
+          f"{int(np.argmax(rep))} (lateness-exempt, never dropped)")
     print(f"final budget {ex.core_budget} after {ctl.resizes} elastic "
           f"resizes; fleet step traced {ex.trace_count} time(s) "
           f"(bound: {ctl.max_trace_count})")

@@ -26,19 +26,31 @@ from repro.core.overlay import Overlay
 
 def remesh(old_shape: dict, new_devices: list, axis_names: tuple) -> "jax.sharding.Mesh":
     """Build the largest mesh of the same axis structure that fits the
-    surviving device list (data axis absorbs the change)."""
+    surviving device list.
+
+    Multi-axis meshes preserve the trailing (model) axis and let the
+    leading data axis absorb the change.  A single-axis mesh — e.g. the
+    stream fleet's ``("edge",)`` — has no model axis to preserve: the
+    only axis *is* the elastic one, and every surviving device lands on
+    it (the fleet shrink/grow path used by ``FleetExecutor.remesh``).
+    """
     n = len(new_devices)
-    model = old_shape[axis_names[-1]]
-    lead = n // model
-    if lead == 0 or lead * model != n:
-        raise ValueError(f"{n} devices cannot keep model={model}")
-    if len(axis_names) == 3:
-        pod = old_shape[axis_names[0]]
-        while pod > 1 and lead % pod:
-            pod //= 2
-        shape = (pod, lead // pod, model)
+    if n < 1:
+        raise ValueError("no devices to re-mesh over")
+    if len(axis_names) == 1:
+        shape = (n,)
     else:
-        shape = (lead, model)
+        model = old_shape[axis_names[-1]]
+        lead = n // model
+        if lead == 0 or lead * model != n:
+            raise ValueError(f"{n} devices cannot keep model={model}")
+        if len(axis_names) == 3:
+            pod = old_shape[axis_names[0]]
+            while pod > 1 and lead % pod:
+                pod //= 2
+            shape = (pod, lead // pod, model)
+        else:
+            shape = (lead, model)
     devs = np.asarray(new_devices[: int(np.prod(shape))]).reshape(shape)
     return jax.sharding.Mesh(devs, axis_names)
 
@@ -81,7 +93,15 @@ class ElasticBudget:
             raise ValueError(f"need grow_factor > 1, patience >= 1: {self}")
 
     def propose(self, demand: int, budget: int) -> int:
-        """One control tick: observed demand -> proposed budget."""
+        """One control tick: observed demand -> proposed budget.
+
+        Patience is only consumed by proposals that actually move the
+        budget: at a saturated ceiling (``budget == max_budget`` under
+        pressure) or floor (``budget == min_budget`` when idle) the
+        proposal is a no-op and the counters keep accruing — sustained
+        pressure at the ceiling must not re-pay full patience every
+        tick, so the moment headroom appears the resize fires at once.
+        """
         util = demand / max(budget, 1)
         if util >= self.grow_at:
             self._hot, self._cold = self._hot + 1, 0
@@ -90,12 +110,16 @@ class ElasticBudget:
         else:
             self._hot = self._cold = 0
         if self._hot >= self.patience:
-            self._hot = 0
-            return min(self.max_budget,
-                       max(budget + 1, int(budget * self.grow_factor)))
+            proposed = min(self.max_budget,
+                           max(budget + 1, int(budget * self.grow_factor)))
+            if proposed != budget:
+                self._hot = 0
+                return proposed
         if self._cold >= self.patience:
-            self._cold = 0
-            return max(self.min_budget, int(budget / self.grow_factor))
+            proposed = max(self.min_budget, int(budget / self.grow_factor))
+            if proposed != budget:
+                self._cold = 0
+                return proposed
         return budget
 
 

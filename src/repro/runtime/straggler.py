@@ -51,6 +51,11 @@ class StragglerDetector:
         timings never manufacture stragglers.
         """
         st = np.asarray(step_times, np.float64)
+        if st.shape != (self.num_ranks,):
+            raise ValueError(
+                f"step_times must be one measurement per rank, shape "
+                f"({self.num_ranks},), got {st.shape} — a misaligned "
+                f"telemetry feed would silently flag the wrong ranks")
         self._hist.append(st)
         if len(self._hist) > self.window:
             self._hist.pop(0)
@@ -69,6 +74,12 @@ class StragglerDetector:
         """Per-rank median over the *present* (positive) history
         samples, plus the has-any-signal mask.  Zeros are missing
         measurements and never dilute the median."""
+        if not self._hist:
+            # no observations yet (a leave at tick 0, or right after a
+            # re-mesh rebuilt the detector): every rank is signal-less,
+            # so reassignment falls back to deterministic index order
+            return (np.zeros(self.num_ranks),
+                    np.zeros(self.num_ranks, bool))
         stack = np.stack(self._hist)                       # [h, R]
         seen = stack > 0.0
         has_signal = seen.any(axis=0)

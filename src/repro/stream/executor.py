@@ -82,6 +82,7 @@ class StreamMetrics(NamedTuple):
     items_rejected: jnp.ndarray    # backpressure (ring full)
     items_dequeued: jnp.ndarray    # consumed by the executor
     items_late: jnp.ndarray        # dropped by the watermark
+    items_replayed: jnp.ndarray    # backup-replay records (lateness-exempt)
     windows_emitted: jnp.ndarray   # windows with >= min_count samples
     rules_fired: jnp.ndarray       # windows with consequence != NONE
     windows_escalated: jnp.ndarray # sent to the core tier
@@ -142,6 +143,7 @@ class IngestResult(NamedTuple):
     n_dequeued: jnp.ndarray
     n_late: jnp.ndarray
     n_late_excluded: jnp.ndarray   # admitted, but late vs the fleet ref
+    n_replayed: jnp.ndarray        # replay-mode records (never late-dropped)
 
 
 def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
@@ -149,7 +151,8 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
                       ts: jnp.ndarray,
                       watermark_ts: jnp.ndarray | None = None,
                       offer_mask: jnp.ndarray | None = None,
-                      excluded_ref: jnp.ndarray | None = None
+                      excluded_ref: jnp.ndarray | None = None,
+                      replay: jnp.ndarray | None = None
                       ) -> IngestResult:
     """enqueue -> dequeue -> watermark -> carry-continuous windows ->
     rule features, as one fixed-shape pure function.
@@ -167,8 +170,25 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
     by ``excluded_ref`` are counted in ``n_late_excluded`` — the
     catch-up records of a straggler-excluded shard, processed locally
     and flagged, never silently dropped.
+
+    ``replay``: optional [] bool (a traced operand): this tick's
+    *offered batch* is backup-replay traffic — another shard's
+    buffered micro-batches re-executed here after the owner left the
+    fleet.  Replayed records are exempt from the late test (they are
+    old by construction; the whole point is to never drop them),
+    counted in ``n_replayed`` instead of ``n_late``/
+    ``n_late_excluded``, and they never advance this shard's *own*
+    running max event time: a foreign stream must not perturb the
+    local event-time clock, or the backup's own still-queued batches
+    would arrive "late" against it.  The exemption is positional —
+    the ring is FIFO, so rows the ring already held before this offer
+    dequeue first and keep exact normal semantics; only the rows this
+    tick's replay offer contributed are exempt.  (Replay offers do
+    consume ring capacity like any offer: rows a full ring rejects
+    surface in ``items_rejected``.)
     """
     n_in = items.shape[0]
+    held = state.rb.head - state.rb.tail       # rows queued before this offer
     rows_in = jnp.concatenate(
         [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
         axis=1)
@@ -181,13 +201,33 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
 
     rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
     wm = state.max_ts if watermark_ts is None else watermark_ts
+    dequeued = valid
     valid, n_late, max_ts = W.apply_watermark(
         rows[:, 0], valid, wm, cfg.lateness)
     max_ts = jnp.maximum(state.max_ts, max_ts)
+    if replay is None:
+        exempt = jnp.zeros(dequeued.shape, bool)
+        n_rep = jnp.zeros((), jnp.int32)
+    else:
+        # FIFO positional split: rows the ring held before this offer
+        # dequeue first and keep exact normal semantics; only the rows
+        # the replay offer contributed are lateness-exempt
+        pos = jnp.arange(cfg.micro_batch, dtype=held.dtype)
+        exempt = jnp.asarray(replay, bool) & (pos >= held)
+        valid = jnp.where(exempt, dequeued, valid)
+        n_rep = jnp.sum((exempt & dequeued).astype(jnp.int32))
+        n_late = jnp.sum((dequeued & ~valid & ~exempt).astype(jnp.int32))
+        own_max = jnp.max(jnp.where(
+            dequeued & ~exempt, rows[:, 0],
+            jnp.asarray(jnp.finfo(jnp.float32).min)))
+        max_ts = jnp.where(jnp.asarray(replay, bool),
+                           jnp.maximum(state.max_ts, own_max),  # own rows
+                           max_ts)                     # foreign clock apart
     if excluded_ref is None:
         n_lx = jnp.zeros((), jnp.int32)
     else:
-        n_lx = jnp.sum((valid & (rows[:, 0] < excluded_ref - cfg.lateness))
+        n_lx = jnp.sum((valid & ~exempt
+                        & (rows[:, 0] < excluded_ref - cfg.lateness))
                        .astype(jnp.int32))
 
     # cross-batch continuity: prepend the carried W-S samples
@@ -214,7 +254,7 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
         consequence=cons, emit=emit, record=record,
         n_in=n_offered, n_accepted=n_acc,
         n_dequeued=jnp.sum(valid.astype(jnp.int32)) + n_late,
-        n_late=n_late, n_late_excluded=n_lx)
+        n_late=n_late, n_late_excluded=n_lx, n_replayed=n_rep)
 
 
 def advance_metrics(m: StreamMetrics, ing: IngestResult,
@@ -230,6 +270,7 @@ def advance_metrics(m: StreamMetrics, ing: IngestResult,
         items_rejected=m.items_rejected + (ing.n_in - ing.n_accepted),
         items_dequeued=m.items_dequeued + ing.n_dequeued,
         items_late=m.items_late + ing.n_late,
+        items_replayed=m.items_replayed + ing.n_replayed,
         windows_emitted=m.windows_emitted
         + jnp.sum(ing.emit.astype(jnp.int32)),
         rules_fired=m.rules_fired

@@ -1,4 +1,5 @@
 from repro.stream.fleet.control import (  # noqa: F401
+    Churn,
     ControlDecision,
     Fault,
     FaultInjector,

@@ -126,6 +126,108 @@ class FleetController:
         """Budget resizes actuated so far (for trace-bound asserts)."""
         return self._resizes
 
+    # -- membership churn (leave/join within the mesh width) ---------------
+    def _unavailable(self) -> set:
+        """Ranks that cannot serve as a replay backup right now:
+        departed members plus currently-flagged stragglers."""
+        ex = self.executor
+        return (set(int(i) for i in np.nonzero(~ex.active)[0])
+                | set(self.wall_detector.stragglers())
+                | set(self.lag_detector.stragglers()))
+
+    def leave(self, shard: int) -> int | None:
+        """A member left the fleet *within* the current mesh width:
+        flip its ``active`` flag (a traced operand — no recompile) and
+        pick the backup rank that should re-run its buffered
+        micro-batches (``StragglerDetector.reassignment`` over the
+        wall-time history: the least-loaded healthy, present rank).
+        Returns the backup rank, or ``None`` when no healthy rank is
+        left to replay on (the records then wait for a joiner)."""
+        ex = self.executor
+        active = ex.active
+        if not active[shard]:
+            raise ValueError(f"shard {shard} already left")
+        active[shard] = False
+        ex.set_active(active)
+        plan = self.wall_detector.reassignment(
+            sorted(self._unavailable() | {int(shard)}))
+        return plan.get(int(shard))
+
+    def join(self, shard: int) -> None:
+        """A device joined (or rejoined) at slot ``shard`` within the
+        current mesh width: flip its ``active`` flag back on.  The
+        joiner starts *excluded* from the watermark ``pmin`` — its
+        slot's event-time state is frozen at leave time, so any backlog
+        it drains must run against its own watermark (the catch-up
+        path, counted in ``late_excluded``) — and is re-admitted by
+        :meth:`tick`'s ordinary hysteresis once its lag fits the
+        lateness bound.  Waiting for the lag *detector* to flag it
+        instead would silently late-drop the backlog of any departure
+        shorter than the detector's ramp (window median + patience)."""
+        ex = self.executor
+        active = ex.active
+        if active[shard]:
+            raise ValueError(f"shard {shard} is already a member")
+        active[shard] = True
+        ex.set_active(active)
+        healthy = ex.health
+        healthy[shard] = False
+        ex.set_health(healthy)
+        self._prev_healthy[shard] = False    # re-admit only once caught up
+
+    def remesh(self, state, devices: list, *, keep: list | None = None,
+               num_core: int | None = None):
+        """The device set actually changed: rebuild the mesh over the
+        survivors (one re-trace) and migrate the state — see
+        :meth:`FleetExecutor.remesh`.  Departed shards' counters fold
+        into their ``reassignment``-chosen backups, and their
+        unconsumed ring rows come back as the replay payload.  The
+        controller's own per-rank state (detectors, escalation
+        baselines, re-admission memory) is re-built for the new width;
+        detector history does not survive a re-mesh.  Slots are
+        *renumbered* (old shard ``keep[j]`` -> new slot ``j``): any
+        live ``FaultInjector`` schedule or ``backups`` plan addressed
+        in the old numbering must be drained or rebuilt — see
+        :meth:`FleetExecutor.remesh`."""
+        ex = self.executor
+        old_e = ex.cfg.num_shards
+        if keep is None:
+            new_e = len(list(devices))
+            keep = [i if i < old_e else None for i in range(new_e)]
+        kept = [k for k in keep if k is not None]
+        departed = sorted(set(range(old_e)) - set(kept))
+        plan = self.wall_detector.reassignment(
+            sorted(set(departed) | self._unavailable()))
+        fold = {s: b for s, b in plan.items() if s in departed and b in kept}
+        # monotone counters must land on SOME surviving row even when
+        # reassignment has no healthy pick (every survivor flagged):
+        # losing them would regress fleet totals with no error
+        for s in departed:
+            if s not in fold and kept:
+                fold[s] = kept[0]
+        new_state, payload = ex.remesh(state, devices, keep=keep,
+                                       num_core=num_core,
+                                       fold_counters=fold)
+
+        def _remap(arr, fill):
+            return np.asarray([arr[k] if k is not None else fill
+                               for k in keep], arr.dtype)
+
+        # the executor folded the departed shard's cumulative counters
+        # into its backup row; the escalation baseline must fold the
+        # same way, or the first post-shrink tick reads the departed
+        # shard's whole history as one tick of phantom demand
+        for src, dst in fold.items():
+            self._prev_escalated[dst] += self._prev_escalated[src]
+        self._prev_escalated = _remap(self._prev_escalated, 0)
+        self._prev_healthy = _remap(self._prev_healthy, True)
+        for name in ("wall_detector", "lag_detector"):
+            d = getattr(self, name)
+            setattr(self, name, StragglerDetector(
+                ex.cfg.num_shards, window=d.window, threshold=d.threshold,
+                patience=d.patience, floor=d.floor))
+        return new_state, payload
+
     def tick(self, state: FleetState,
              step_times: np.ndarray | None = None) -> ControlDecision:
         """One control tick: observe ``state``, actuate health mask +
@@ -186,8 +288,10 @@ class FleetController:
     @property
     def max_trace_count(self) -> int:
         """Upper bound the executor's trace count must respect:
-        ``1 + (#resizes that grew the slot ceiling)``."""
-        return 1 + self._retraces
+        ``1 + (#resizes that grew the slot ceiling) + (#re-meshes)``.
+        Membership flips (leave/join within the mesh width) are traced
+        operands and contribute nothing."""
+        return 1 + self._retraces + self.executor.remeshes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,81 +310,208 @@ class Fault:
 
 
 @dataclasses.dataclass(frozen=True)
+class Churn:
+    """One membership churn event: the device at slot ``shard`` leaves
+    the fleet at tick ``leave`` and a replacement joins the same slot
+    at tick ``join`` (``None`` = never).  While departed, the stream's
+    batches queue in a replay queue; a ``reassignment``-chosen backup
+    re-runs them (the ``replay`` uplink path) until the joiner takes
+    the slot back."""
+    shard: int
+    leave: int
+    join: int | None = None
+
+    def __post_init__(self):
+        if self.shard < 0 or (self.join is not None
+                              and self.join <= self.leave):
+            raise ValueError(f"bad churn event: {self}")
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultSchedule:
     """Deterministic degradation script for tests, the example, and the
-    ``--faults`` benchmark mode: which shards are stalled at each
-    tick.  Purely declarative — :class:`FaultInjector` turns it into
-    offered-masks and buffered backlogs, and :meth:`stall_time` into
+    ``--faults``/``--churn`` benchmark modes: which shards are stalled
+    or departed at each tick.  Purely declarative —
+    :class:`FaultInjector` turns it into offered-masks, buffered
+    backlogs, and backup-replay deliveries, and :meth:`stall_time` into
     synthetic per-shard telemetry."""
-    faults: tuple
+    faults: tuple = ()
+    churn: tuple = ()
 
     def __post_init__(self):
         object.__setattr__(self, "faults", tuple(self.faults))
+        object.__setattr__(self, "churn", tuple(self.churn))
 
     def stalled(self, tick: int) -> set:
         """Shards stalled at ``tick``."""
         return {f.shard for f in self.faults if f.start <= tick < f.end}
 
+    def departed(self, tick: int) -> set:
+        """Shards whose slot has no member device at ``tick``."""
+        return {c.shard for c in self.churn
+                if c.leave <= tick and (c.join is None or tick < c.join)}
+
     def stall_time(self, tick: int, num_shards: int, base: float = 0.1,
                    stalled_factor: float = 50.0) -> np.ndarray:
         """Synthetic per-shard wall times for ``tick``: ``base`` for
-        healthy shards, ``base * stalled_factor`` for stalled ones —
-        what real per-device telemetry would report."""
+        healthy shards, ``base * stalled_factor`` for stalled ones, and
+        0.0 (a *missing measurement*, per the detector contract) for
+        departed ones — what real per-device telemetry would report."""
         t = np.full(num_shards, base)
         for s in self.stalled(tick):
             t[s] = base * stalled_factor
+        for s in self.departed(tick):
+            t[s] = 0.0
         return t
 
 
 class FaultInjector:
     """Drives a :class:`FaultSchedule` against a fleet feed: the one
-    copy of the stall/backlog/drain bookkeeping shared by the fault
-    tests, the degraded benchmark, and the example.
+    copy of the stall/backlog/replay/drain bookkeeping shared by the
+    fault tests, the degraded benchmarks, and the example.
 
     A stalled shard's batches buffer upstream (offered mask False); a
     recovered shard drains its backlog oldest-first at production rate
-    while fresh batches keep queueing (the catch-up path).  After the
-    stream ends, keep calling :meth:`inject` with ``fresh=False`` (and
-    ``tick`` advancing past the fault windows — a still-stalled uplink
-    never delivers) until :attr:`pending` is 0 so the tail drains —
-    otherwise the buffered records really would be lost, which is
-    exactly what the control plane exists to prevent.
+    while fresh batches keep queueing (the catch-up path).
+
+    A *departed* shard (:class:`Churn`) buffers its stream in a
+    per-stream **replay queue** instead: while it is away, the backup
+    rank named in ``backups`` (the control plane's
+    ``StragglerDetector.reassignment`` choice, via
+    ``FleetController.leave``) re-runs those micro-batches on its own
+    uplink — delivered with the ``replay`` flag set, so the executor
+    admits them regardless of lateness and counts them in
+    ``items_replayed``.  The backup's own fresh batches queue behind in
+    its stall backlog meanwhile.  Once a joiner takes the slot back,
+    any remaining queued batches drain on the slot itself (ordinary
+    catch-up, stream order preserved), and fresh delivery resumes.
+
+    :attr:`origin` records, after each :meth:`inject`, which stream's
+    batch each slot delivered (-1 = nothing) — the attribution tests
+    and benchmarks need to compare a churned run against a healthy
+    oracle per *stream*, not per slot.
+
+    After the stream ends, keep calling :meth:`inject` with
+    ``fresh=False`` (and ``tick`` advancing past the fault windows — a
+    still-stalled uplink never delivers) until :attr:`pending` is 0 so
+    the tail drains — otherwise the buffered records really would be
+    lost, which is exactly what the control plane exists to prevent.
     """
 
     def __init__(self, schedule: FaultSchedule):
         self.schedule = schedule
         self._backlog = collections.defaultdict(collections.deque)
+        self._replay = collections.defaultdict(collections.deque)
+        self.origin = None                  # [E] after the first inject
         for f in schedule.faults:
             self._backlog[f.shard]          # materialize per-shard queues
+        for c in schedule.churn:
+            self._replay[c.shard]
 
     @property
     def pending(self) -> int:
-        """Batches still buffered upstream across all faulted shards."""
-        return sum(len(q) for q in self._backlog.values())
+        """Batches still buffered upstream across all faulted and
+        departed shards (stall backlogs + replay queues)."""
+        return sum(len(q) for q in self._backlog.values()) \
+            + sum(len(q) for q in self._replay.values())
+
+    def requeue(self, stream: int, rows: np.ndarray,
+                batch: int) -> None:
+        """Push raw ``[k, 1+D]`` ring rows (``ts`` in column 0) onto
+        ``stream``'s replay queue as ``<= batch``-sized deliveries —
+        the landing pad for ``FleetExecutor.remesh``'s departed-shard
+        payload (a dead device's unconsumed ring, re-run elsewhere)."""
+        for lo in range(0, len(rows), batch):
+            chunk = rows[lo:lo + batch]
+            n, d = chunk.shape[0], chunk.shape[1] - 1
+            items = np.zeros((batch, d), np.float32)
+            t = np.zeros((batch,), np.float32)
+            mask = np.zeros((batch,), bool)
+            items[:n], t[:n], mask[:n] = chunk[:, 1:], chunk[:, 0], True
+            self._replay[stream].append((items, t, mask))
 
     def inject(self, tick: int, items: np.ndarray, ts: np.ndarray,
-               fresh: bool = True
-               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+               fresh: bool = True, backups: dict | None = None
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Apply the schedule to this tick's producer batch.
 
         items: [E, N, D], ts: [E, N] (the healthy ground-truth feed;
         with ``fresh=False`` both are only a shape/dtype template for a
-        drain tick).  Returns (items, ts, offered) copies with stalled
-        shards blanked and recovering shards replaying their backlog.
+        drain tick).  ``backups``: {departed shard -> backup rank}, the
+        control plane's current reassignment plan.  Returns (items, ts,
+        offered, replay) copies: stalled shards blanked, recovering
+        shards draining their backlog, departed streams replaying on
+        their backup's uplink with the per-shard ``replay`` flag set.
         """
         items, ts = items.copy(), ts.copy()
+        e, n = ts.shape
         offered = np.full(ts.shape, fresh, bool)
-        for s, q in self._backlog.items():
-            stalled = s in self.schedule.stalled(tick)
-            if fresh and stalled:
+        replay = np.zeros(e, bool)
+        origin = np.full(e, -1, np.int64)
+        if fresh:
+            origin[:] = np.arange(e)
+        claimed = set()                     # slots with a delivery decided
+        departed = self.schedule.departed(tick)
+        stalled = self.schedule.stalled(tick)
+        full = np.ones(n, bool)
+
+        # 1. churn slots: a departed stream queues; a rejoined slot with
+        #    a remaining queue drains it in stream order (fresh behind)
+        for s, q in list(self._replay.items()):
+            if s in departed:
+                if fresh:
+                    q.append((items[s].copy(), ts[s].copy(), full.copy()))
+                offered[s] = False
+                items[s] = 0.0
+                origin[s] = -1
+                claimed.add(s)
+            elif q and s not in stalled:
+                if fresh:
+                    q.append((items[s].copy(), ts[s].copy(), full.copy()))
+                items[s], ts[s], offered[s] = q.popleft()
+                origin[s] = s
+                claimed.add(s)
+
+        # 2. stall buffering: a stalled uplink delivers nothing
+        for s, q in list(self._backlog.items()):
+            if s in claimed:
+                continue
+            if fresh and s in stalled:
                 q.append((items[s].copy(), ts[s].copy()))
                 offered[s] = False
                 items[s] = 0.0
-            elif q and not stalled:
-                # a still-stalled uplink never delivers, even on drain
-                # ticks — keep `tick` advancing past the fault windows
-                if fresh:
-                    q.append((items[s].copy(), ts[s].copy()))
-                items[s], ts[s] = q.popleft()
-                offered[s] = True
-        return items, ts, offered
+                origin[s] = -1
+                claimed.add(s)
+
+        # 3. backup replay: a departed stream's oldest batch re-runs on
+        #    its backup's uplink (priority over the backup's own
+        #    backlog; the backup's fresh batch queues behind)
+        for s, b in (backups or {}).items():
+            q = self._replay[s]
+            # b is None when leave() found no healthy rank: the queue
+            # simply waits (a None must never reach the numpy indexing
+            # below — None indexes as np.newaxis and would broadcast
+            # the replay chunk over the whole fleet)
+            if (b is not None and s in departed and q and b not in claimed
+                    and b not in stalled and b not in departed and b != s):
+                if fresh and offered[b].any():
+                    self._backlog[b].append((items[b].copy(),
+                                             ts[b].copy()))
+                items[b], ts[b], offered[b] = q.popleft()
+                replay[b] = True
+                origin[b] = s
+                claimed.add(b)
+
+        # 4. backlog drain: recovered shards catch up oldest-first
+        for s, q in list(self._backlog.items()):
+            if s in claimed or not q or s in stalled:
+                continue
+            # a still-stalled uplink never delivers, even on drain
+            # ticks — keep `tick` advancing past the fault windows
+            if fresh:
+                q.append((items[s].copy(), ts[s].copy()))
+            items[s], ts[s] = q.popleft()
+            offered[s] = True
+            origin[s] = s
+        self.origin = origin
+        return items, ts, offered, replay

@@ -23,6 +23,30 @@ lone devices except where the fleet semantics intentionally differ —
 * core capacity is a **fleet-level budget**: the first ``core_budget``
   escalated windows per step (deterministic shard-major order) get core
   compute wherever they came from; the rest keep their edge results.
+
+Fleet **churn** (devices leave and join) is handled at two granularities:
+
+* **membership mask** — ``active`` is a per-shard traced operand
+  (alongside ``healthy``/``offered``/``budget``): a shard leaving or a
+  spare joining *within* the current mesh width recompiles nothing.
+  An inactive shard contributes no watermark, no escalations, and no
+  fleet psums; whatever already sits in its ring keeps draining
+  locally against its own watermark, surfacing on its own rows only.
+  The core sub-mesh (ranks ``0..num_core-1``) must stay active — a
+  core rank leaving is a device-set change, i.e. a :meth:`remesh`.
+* **re-mesh** — when the device set actually changes,
+  :meth:`FleetExecutor.remesh` rebuilds the mesh over the survivors
+  (``runtime.elastic.remesh`` on the single ``("edge",)`` axis),
+  re-shards the state with ``runtime.elastic.reshard_state``
+  (surviving rows migrate; a departed shard's unconsumed ring rows
+  come back to the host as the backup-replay payload and its counters
+  fold into a surviving row), and costs exactly one re-trace
+  (``trace_count <= 1 + retraces + remeshes``).
+
+Backup replay rides the ``replay`` per-shard operand: a tick whose
+batch is another (departed) shard's buffered micro-batches is exempt
+from the late test, counted in ``items_replayed``, and never advances
+the host shard's own event-time clock.
 """
 from __future__ import annotations
 
@@ -34,7 +58,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime import elastic
 
 from repro.core import rules as R
 from repro.core.pipeline import DataDrivenPipeline
@@ -178,28 +204,42 @@ class FleetExecutor:
                              f"says {cfg.num_shards}")
         self.mesh = mesh
         self._traces = 0
+        self._remeshes = 0
         self._budget = cfg.core_budget       # dynamic, a traced operand
         self._slots = cfg.core_slots         # static shape ceiling
         self._healthy = np.ones(cfg.num_shards, bool)
+        self._active = np.ones(cfg.num_shards, bool)
         self.last_step_seconds = 0.0
+        # when True (default), step() blocks on the output so
+        # last_step_seconds measures device execution — the control
+        # plane's default wall-time straggler signal.  Deployments with
+        # real per-device telemetry (they pass step_times to
+        # FleetController.tick) can set it False to keep async dispatch
+        # and host/device overlap; last_step_seconds then reads
+        # dispatch time only.
+        self.measure_steps = True
         self._build()
 
     def _build(self) -> None:
         """(Re)build the jitted fleet step for the current static slot
-        ceiling.  Called once at init and again only when the control
-        plane grows the budget past ``self._slots`` — each rebuild
-        costs exactly one re-trace on the next step."""
+        ceiling, mesh, and shard count.  Called once at init and again
+        only when the control plane grows the budget past
+        ``self._slots`` or :meth:`remesh` changes the device set — each
+        rebuild costs exactly one re-trace on the next step."""
         cfg = self.cfg
         spec = P(cfg.axis_name)
         sharded = shard_map(self._fleet_step, mesh=self.mesh,
-                            in_specs=(spec, spec, spec, spec, spec, P()),
+                            in_specs=(spec, spec, spec, spec, spec, spec,
+                                      spec, P()),
                             out_specs=(spec, spec))
 
-        def _traced(state, items, ts, offered, healthy, budget):
+        def _traced(state, items, ts, offered, replay, healthy, active,
+                    budget):
             # outer jit body runs once per trace (shard_map may re-trace
             # its inner fn during lowering; don't count those)
             self._traces += 1
-            return sharded(state, items, ts, offered, healthy, budget)
+            return sharded(state, items, ts, offered, replay, healthy,
+                           active, budget)
 
         self._jstep = jax.jit(_traced, donate_argnums=(0,))
 
@@ -242,6 +282,37 @@ class FleetExecutor:
     def health(self) -> np.ndarray:
         return self._healthy.copy()
 
+    def set_active(self, active: np.ndarray) -> None:
+        """Install the per-shard membership mask for the *next* tick
+        (False = the device left the fleet).  A membership flip within
+        the current mesh width is a traced operand — it recompiles
+        nothing.  Inactive shards contribute no watermark, no
+        escalations, and no fleet psums.
+
+        The core sub-mesh (ranks ``0..num_core-1``) must stay active:
+        escalated records land there by global-slot arithmetic, so a
+        core rank leaving is a real device-set change — use
+        :meth:`remesh` for that."""
+        active = np.asarray(active, bool)
+        if active.shape != (self.cfg.num_shards,):
+            raise ValueError(f"active mask must be [{self.cfg.num_shards}]"
+                             f", got {active.shape}")
+        if not active[:self.cfg.num_core].all():
+            raise ValueError(
+                f"core sub-mesh ranks 0..{self.cfg.num_core - 1} must stay "
+                f"active (got {active}); a core rank leaving changes the "
+                f"device set — use remesh()")
+        self._active = active.copy()
+
+    @property
+    def active(self) -> np.ndarray:
+        return self._active.copy()
+
+    @property
+    def remeshes(self) -> int:
+        """Device-set rebuilds so far — each costs one re-trace."""
+        return self._remeshes
+
     # -- state ------------------------------------------------------------
     def init_state(self, feature_dim: int) -> FleetState:
         cfg, E = self.cfg.stream, self.cfg.num_shards
@@ -279,35 +350,43 @@ class FleetExecutor:
     # -- the single-trace fleet tick ---------------------------------------
     def _fleet_step(self, state: FleetState, items: jnp.ndarray,
                     ts: jnp.ndarray, offered: jnp.ndarray,
-                    healthy: jnp.ndarray, budget: jnp.ndarray
+                    replay: jnp.ndarray, healthy: jnp.ndarray,
+                    active: jnp.ndarray, budget: jnp.ndarray
                     ) -> tuple[FleetState, StepOutput]:
         cfg = self.cfg
         s = jax.tree.map(lambda x: x[0], state)        # this shard's block
         h = healthy[0]                                 # this shard's flag
+        a = active[0]                                  # membership flag
+        r = replay[0]                                  # backup-replay tick
 
         # fleet watermark: min of per-shard maxima (as of the previous
-        # step) over *healthy* shards — a lagging-but-healthy shard
-        # holds back lateness fleet-wide; a flagged straggler doesn't.
-        # An excluded shard falls back to its own running max (exact
-        # single-device semantics): it keeps processing its backlog —
-        # the catch-up path — and every record it admits past the fleet
-        # reference is counted in late_excluded, never silently lost.
-        # Clamped against the previous reference: re-admitting a shard
-        # that still trails must not roll the published watermark back
+        # step) over *healthy, active* shards — a lagging-but-healthy
+        # shard holds back lateness fleet-wide; a flagged straggler or
+        # a departed shard doesn't.  An excluded-but-present shard
+        # falls back to its own running max (exact single-device
+        # semantics): it keeps processing its backlog — the catch-up
+        # path — and every record it admits past the fleet reference is
+        # counted in late_excluded, never silently lost.  Clamped
+        # against the previous reference: re-admitting a shard that
+        # still trails must not roll the published watermark back
         # (watermarks are monotone; the control plane delays
         # re-admission until the shard's records would survive this
         # reference, so the clamp never converts into silent drops).
         wm = jnp.maximum(
-            F.fleet_watermark(s.shard.max_ts, cfg.axis_name, healthy=h),
+            F.fleet_watermark(s.shard.max_ts, cfg.axis_name, healthy=h,
+                              active=a),
             s.watermark)
-        eff_wm = jnp.where(h, wm, s.shard.max_ts)
+        eff_wm = jnp.where(h & a, wm, s.shard.max_ts)
         ing = ingest_and_window(cfg.stream, self.engine, s.shard,
                                 items[0], ts[0], watermark_ts=eff_wm,
-                                offer_mask=offered[0], excluded_ref=wm)
+                                offer_mask=offered[0], excluded_ref=wm,
+                                replay=r)
 
-        # edge pipeline stages + rule gating, purely local
+        # edge pipeline stages + rule gating, purely local; a departed
+        # shard never escalates (membership masks the core exchange)
         partial, core_live = self.pipeline.run_edge(ing.record,
                                                     live=ing.emit)
+        core_live = core_live & a
 
         # escalation: one all-to-all out, fleet-budgeted core stage,
         # one all-to-all back; the budget is a traced operand, its
@@ -329,9 +408,13 @@ class FleetExecutor:
         new_shard = StreamState(rb=ing.rb, carry=ing.carry,
                                 carry_valid=ing.carry_valid,
                                 max_ts=ing.max_ts, metrics=metrics)
+        # fleet totals sum over *members* only: a departed shard's rows
+        # drop out of the psum while it is away and return on rejoin
+        contrib = jax.tree.map(lambda v: jnp.where(a, v, jnp.zeros_like(v)),
+                               metrics)
         new_state = FleetState(
             shard=new_shard,
-            fleet=F.allreduce_metrics(metrics, cfg.axis_name),
+            fleet=F.allreduce_metrics(contrib, cfg.axis_name),
             escalations_sent=s.escalations_sent + stats.escalations_sent,
             core_received=s.core_received + stats.core_received,
             core_processed=s.core_processed + stats.core_processed,
@@ -347,7 +430,8 @@ class FleetExecutor:
 
     # -- public API ---------------------------------------------------------
     def step(self, state: FleetState, items: jnp.ndarray,
-             ts: jnp.ndarray, offered: jnp.ndarray | None = None
+             ts: jnp.ndarray, offered: jnp.ndarray | None = None,
+             replay: jnp.ndarray | None = None
              ) -> tuple[FleetState, StepOutput]:
         """One fleet tick: offer ``items [E, N, D]`` with event
         timestamps ``ts [E, N]`` (one producer batch per shard),
@@ -357,15 +441,158 @@ class FleetExecutor:
         ``offered``: optional [E, N] bool — which producer slots hold
         real items (a stalled shard's uplink offers nothing while its
         batches buffer upstream; shapes stay fixed, so the single
-        trace survives fleet degradation).  The current health mask
-        (``set_health``) and dynamic core budget (``set_core_budget``)
-        ride along as traced operands.  ``last_step_seconds`` records
-        the host wall time of the call."""
+        trace survives fleet degradation).  ``replay``: optional [E]
+        bool — which shards' batches are backup-replay traffic (a
+        departed peer's buffered micro-batches re-executed here:
+        lateness-exempt, counted in ``items_replayed``, never touching
+        the host shard's own event-time clock).  The current health
+        mask (``set_health``), membership mask (``set_active``), and
+        dynamic core budget (``set_core_budget``) ride along as traced
+        operands.
+
+        ``last_step_seconds`` records the host wall time of the call
+        *including device execution* (the output is blocked on before
+        the clock stops): jit dispatch is async, so an unsynchronized
+        reading would time the host dispatch only and feed the control
+        plane's wall-time straggler detector a signal a slow device
+        never inflates.  Callers with real per-device telemetry can set
+        ``measure_steps = False`` to skip the sync and keep host/device
+        overlap."""
         if offered is None:
             offered = jnp.ones(items.shape[:2], bool)
+        if replay is None:
+            replay = np.zeros(self.cfg.num_shards, bool)
+        elif np.asarray(replay).any():
+            # batch-granular replay preconditions, enforced (silent
+            # window corruption otherwise, see README "Shard churn"):
+            # tumbling alignment — a sliding carry would smear the
+            # backup's own samples into the replayed stream's windows —
+            # and a per-tick-drained ring (N <= micro_batch; N is fixed
+            # by the trace, so replay rows can never linger in the ring
+            # past their lateness-exempt tick)
+            if self.cfg.stream.carry_len:
+                raise ValueError(
+                    "replay needs tumbling alignment (stride == window): "
+                    f"carry_len={self.cfg.stream.carry_len} would smear "
+                    "the backup's own samples into replayed windows "
+                    "(mid-ring replay for sliding carry is a ROADMAP "
+                    "follow-up)")
+            if items.shape[1] > self.cfg.stream.micro_batch:
+                raise ValueError(
+                    f"replay needs a per-tick-drained ring: offer size "
+                    f"{items.shape[1]} > micro_batch "
+                    f"{self.cfg.stream.micro_batch} leaves replayed rows "
+                    "queued past their lateness-exempt tick")
         t0 = time.perf_counter()
         out = self._jstep(state, items, ts, jnp.asarray(offered, bool),
+                          jnp.asarray(replay, bool),
                           jnp.asarray(self._healthy),
+                          jnp.asarray(self._active),
                           jnp.asarray(self._budget, jnp.int32))
+        if self.measure_steps:
+            jax.block_until_ready(out)
         self.last_step_seconds = time.perf_counter() - t0
         return out
+
+    # -- true re-mesh (the device set changed) ------------------------------
+    def remesh(self, state: FleetState, devices: list, *,
+               keep: list | None = None, num_core: int | None = None,
+               fold_counters: dict | None = None
+               ) -> tuple[FleetState, dict]:
+        """Rebuild the fleet over a *changed device set* and migrate the
+        state — churn beyond what the ``active`` mask can absorb.
+
+        The new mesh is ``runtime.elastic.remesh`` over ``devices`` on
+        the single ``("edge",)`` axis; the re-laid-out state is placed
+        with ``runtime.elastic.reshard_state``.  Costs exactly one
+        re-trace on the next step (``trace_count <= 1 + retraces +
+        remeshes`` — the re-trace discipline the tests and benchmarks
+        assert).
+
+        ``keep``: for each NEW slot, the OLD shard index whose state row
+        (ring buffer, window carry, watermark, counters) it inherits, or
+        ``None`` for a freshly initialized row (a joiner).  Defaults to
+        identity truncation on shrink / identity plus fresh tail slots
+        on grow.  ``num_core`` defaults to the old value clamped to the
+        new width.  ``fold_counters``: optional {departed old index ->
+        surviving old index} — the departed shard's monotone counters
+        (its ``StreamMetrics`` row, ``late_excluded``, escalation
+        counters) are added into the surviving row so fleet totals
+        survive the shrink.
+
+        Returns ``(new_state, departed)`` where ``departed`` maps each
+        dropped old shard index to its *unconsumed* ring rows (host
+        ``[k, 1+D]`` array, ``ts`` in column 0) — the backup-replay
+        payload: route it to the backup's uplink (e.g.
+        ``FaultInjector.requeue``) so nothing the departed shard had
+        accepted is ever dropped.
+
+        A re-mesh *renumbers* slots: old shard ``keep[j]`` is new slot
+        ``j``.  Host-side bookkeeping addressed in the old numbering —
+        a live ``FaultInjector``'s schedule/queues, a ``backups`` plan
+        — is invalid afterwards: drain it first (or seed a fresh
+        injector against the new topology with the returned payload via
+        ``requeue``).  Online slot translation for a mid-schedule
+        re-mesh is a ROADMAP follow-up."""
+        cfg = self.cfg
+        old_e = cfg.num_shards
+        new_mesh = elastic.remesh({cfg.axis_name: old_e}, list(devices),
+                                  (cfg.axis_name,))
+        new_e = new_mesh.shape[cfg.axis_name]
+        if keep is None:
+            keep = [i if i < old_e else None for i in range(new_e)]
+        if len(keep) != new_e:
+            raise ValueError(f"keep must name {new_e} slots, got {keep}")
+        kept = [k for k in keep if k is not None]
+        if len(set(kept)) != len(kept) \
+                or any(not (0 <= k < old_e) for k in kept):
+            raise ValueError(f"keep must be distinct old indices < "
+                             f"{old_e} (or None), got {keep}")
+
+        host = jax.tree.map(np.array, jax.device_get(state))
+        departed_idx = [i for i in range(old_e) if i not in kept]
+        departed = {}
+        rb = host.shard.rb
+        for i in departed_idx:
+            head, tail = int(rb.head[i]), int(rb.tail[i])
+            cap = rb.buf.shape[1]
+            idx = (tail + np.arange(head - tail)) % cap
+            departed[i] = rb.buf[i][idx]           # [pending, 1+D] rows
+        fold_counters = fold_counters or {}
+        if any(src not in departed_idx or dst not in kept
+               for src, dst in fold_counters.items()):
+            raise ValueError(f"fold_counters must map departed -> kept "
+                             f"old indices, got {fold_counters} with "
+                             f"departed={departed_idx}")
+        for src, dst in fold_counters.items():
+            for arr in (list(host.shard.metrics)
+                        + [host.escalations_sent, host.core_received,
+                           host.core_processed, host.late_excluded]):
+                arr[dst] += arr[src]
+
+        feature_dim = rb.buf.shape[-1] - 1
+        self.cfg = dataclasses.replace(
+            cfg, num_shards=new_e,
+            num_core=min(cfg.num_core, new_e) if num_core is None
+            else num_core)
+        self.mesh = new_mesh
+        fresh = jax.device_get(self.init_state(feature_dim))
+        new_host = jax.tree.map(
+            lambda o, f: np.stack(
+                [np.asarray(o[k]) if k is not None else np.asarray(f[j])
+                 for j, k in enumerate(keep)]),
+            host, fresh)
+
+        self._healthy = np.asarray(
+            [self._healthy[k] if k is not None else True for k in keep])
+        self._active = np.asarray(
+            [self._active[k] if k is not None else True for k in keep])
+        self._remeshes += 1
+        self._build()                          # one re-trace, next step
+        spec = P(self.cfg.axis_name)
+        new_state = elastic.reshard_state(
+            new_host,
+            lambda mesh: jax.tree.map(
+                lambda _: NamedSharding(mesh, spec), new_host),
+            new_mesh)
+        return new_state, departed

@@ -35,7 +35,8 @@ from repro.core import routing as RT
 
 
 def fleet_watermark(max_ts: jnp.ndarray, axis_name,
-                    healthy: jnp.ndarray | None = None) -> jnp.ndarray:
+                    healthy: jnp.ndarray | None = None,
+                    active: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fleet watermark = min over shards of the per-shard max event
     time.  Lagging shards hold back window close everywhere.
 
@@ -44,18 +45,31 @@ def fleet_watermark(max_ts: jnp.ndarray, axis_name,
     from the min — a stalled shard can no longer freeze window close
     fleet-wide; its own late records are counted (``late_excluded``)
     and processed against its local watermark, never silently dropped.
-    If *no* shard is healthy the mask is ignored (the plain min is the
-    only consistent reference left)."""
-    if healthy is None:
+
+    ``active``: optional per-shard bool membership flag (also a traced
+    operand).  A shard that left the mesh contributes *nothing*: its
+    frozen max must never hold the reference back, and unlike an
+    unhealthy shard it has no catch-up path of its own.  The fallback
+    is layered — min over healthy&active shards; if none, min over
+    active shards; if the whole fleet is inactive (a host bookkeeping
+    bug, not a reachable steady state), the plain min is the only
+    consistent reference left."""
+    if healthy is None and active is None:
         return jax.lax.pmin(max_ts, axis_name)
-    # one stacked pmin, not three collectives: [masked min, plain min,
-    # 0-iff-any-healthy] — the health path must not break the fleet
-    # tick's one-collective-per-exchange discipline
+    ones = jnp.ones((), bool)
+    h = ones if healthy is None else healthy.astype(bool)
+    a = ones if active is None else active.astype(bool)
+    ha = h & a
+    # one stacked pmin, not five collectives: [healthy&active min,
+    # active min, plain min, 0-iff-any-healthy&active, 0-iff-any-active]
+    # — the mask paths must not break the fleet tick's
+    # one-collective-per-exchange discipline
     big = jnp.asarray(jnp.finfo(jnp.float32).max, max_ts.dtype)
-    h = healthy.astype(max_ts.dtype)
-    vec = jnp.stack([jnp.where(healthy, max_ts, big), max_ts, 1.0 - h])
+    f = max_ts.dtype
+    vec = jnp.stack([jnp.where(ha, max_ts, big), jnp.where(a, max_ts, big),
+                     max_ts, 1.0 - ha.astype(f), 1.0 - a.astype(f)])
     m = jax.lax.pmin(vec, axis_name)
-    return jnp.where(m[2] < 0.5, m[0], m[1])
+    return jnp.where(m[3] < 0.5, m[0], jnp.where(m[4] < 0.5, m[1], m[2]))
 
 
 class FederationStats(NamedTuple):

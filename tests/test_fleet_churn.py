@@ -1,0 +1,390 @@
+"""Churn harness for the fleet: devices leave and join, the fleet
+re-meshes, and a dead shard's backlog replays on a backup.
+
+The subprocess scripts run with 8 forced host devices (same pattern as
+``test_fleet.py``).  What they pin:
+
+* ``runtime.elastic.remesh`` handles 1-, 2-, and 3-axis shrink *and*
+  grow — the single-axis ``("edge",)`` path is what the fleet uses;
+* membership churn within the mesh width (leave -> backup replay ->
+  join) produces output equal to a healthy-fleet oracle per *stream*,
+  with zero dropped records, the ``items_replayed`` counter matching
+  an exact host-side recomputation, and the whole run on ONE trace
+  (``active`` and ``replay`` are operands, not shapes);
+* a true re-mesh (the device set changes) migrates surviving state
+  rows, folds the departed shard's counters into its backup, costs
+  exactly one re-trace each way (``trace_count <= 1 + retraces +
+  remeshes``), and the joiner's fresh row goes live.
+
+The main-process test pins the step-timing fix: ``last_step_seconds``
+must measure device *execution* (blocked-on output), not async host
+dispatch — it is the control plane's default wall-time straggler
+signal, and a dispatch-only reading is blind to a slow device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pipe
+from repro.core import rules
+from repro.stream import StreamConfig
+from repro.stream.fleet import FleetConfig, FleetExecutor
+
+_SCRIPT = textwrap.dedent("""
+    import collections
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    jax.config.update("jax_threefry_partitionable", True)
+    jax.config.update("jax_default_matmul_precision", "highest")
+
+    from repro.core import pipeline as pipe
+    from repro.core import rules
+    from repro.runtime.elastic import ElasticBudget, remesh
+    from repro.stream import StreamConfig
+    from repro.stream.fleet import (Churn, FaultInjector, FaultSchedule,
+                                    FleetConfig, FleetController,
+                                    FleetExecutor)
+
+    # --- remesh: 1-, 2-, 3-axis shrink and grow ------------------------
+    devs = jax.devices()
+    m = remesh({"edge": 8}, devs[:5], ("edge",))          # 1-axis shrink
+    assert dict(m.shape) == {"edge": 5}, m.shape
+    m = remesh({"edge": 3}, devs, ("edge",))              # 1-axis grow
+    assert dict(m.shape) == {"edge": 8}, m.shape
+    m = remesh({"data": 4, "model": 2}, devs[:6], ("data", "model"))
+    assert dict(m.shape) == {"data": 3, "model": 2}       # 2-axis shrink
+    m = remesh({"data": 2, "model": 2}, devs, ("data", "model"))
+    assert dict(m.shape) == {"data": 4, "model": 2}       # 2-axis grow
+    m = remesh({"pod": 2, "data": 2, "model": 2}, devs[:4],
+               ("pod", "data", "model"))                  # 3-axis shrink
+    assert dict(m.shape) == {"pod": 2, "data": 1, "model": 2}
+    m = remesh({"pod": 2, "data": 1, "model": 2}, devs,
+               ("pod", "data", "model"))                  # 3-axis grow
+    assert dict(m.shape) == {"pod": 2, "data": 2, "model": 2}
+    try:
+        remesh({"data": 2, "model": 2}, devs[:5], ("data", "model"))
+        assert False, "5 devices cannot keep model=2"
+    except ValueError:
+        pass
+    try:
+        remesh({"edge": 4}, [], ("edge",))
+        assert False, "no devices must raise"
+    except ValueError:
+        pass
+    print("REMESH_OK")
+
+    # --- churn end-to-end: leave -> backup replay -> join --------------
+    D, BATCH, E = 3, 32, 8
+    edge_fn = lambda p, b: (b * 1.5, b[:, :5])
+    core_fn = lambda p, b: (b + 100.0, b[:, :5])
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 1.0, rules.C_SEND_CORE,
+                             priority=2)])
+    # tumbling windows: batch-granular replay on a foreign slot cannot
+    # smear window boundaries (same restriction the stall harness has)
+    scfg = StreamConfig(micro_batch=BATCH, window=16, stride=16,
+                        capacity=4 * BATCH, lateness=4.0)
+
+    def make_fleet():
+        return FleetExecutor(
+            FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                        core_budget=64),
+            engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine))
+
+    T, SHARD, LEAVE, JOIN = 14, 3, 4, 9
+    rng = np.random.default_rng(0)
+    stream = []                          # healthy ground-truth feed
+    for t in range(T):
+        items = rng.standard_normal((E, BATCH, D)).astype(np.float32)
+        items[:, :, 0] += (t % 3 == 0) * 1.5    # periodic hot regime
+        ts = np.tile(t * BATCH + np.arange(BATCH, dtype=np.float32),
+                     (E, 1))
+        stream.append((items, ts))
+
+    def collect(out, e, store):
+        emit = np.asarray(out.window_count[e]) > 0
+        if emit.any():
+            store["agg"].append(np.asarray(out.aggregates[e])[emit])
+            store["cons"].append(np.asarray(out.consequence[e])[emit])
+            store["outs"].append(np.asarray(out.outputs[e])[emit])
+
+    def cat(store):
+        return {k: np.concatenate(v) if v else np.zeros((0,))
+                for k, v in store.items()}
+
+    orc = make_fleet()
+    ostate = orc.init_state(D)
+    oracle = [collections.defaultdict(list) for _ in range(E)]
+    for t in range(T):
+        items, ts = stream[t]
+        ostate, out = orc.step(ostate, jnp.asarray(items),
+                               jnp.asarray(ts))
+        for e in range(E):
+            collect(out, e, oracle[e])
+    oracle = [cat(o) for o in oracle]
+
+    fx = make_fleet()
+    # pinned budget: the oracle has no controller, so an elastic resize
+    # would be a (legitimate) semantic difference, not a churn bug
+    ctl = FleetController(
+        fx, budget_policy=ElasticBudget(min_budget=64, max_budget=64))
+    sched = FaultSchedule(churn=[Churn(shard=SHARD, leave=LEAVE,
+                                       join=JOIN)])
+    inj = FaultInjector(sched)
+    state = fx.init_state(D)
+    churned = [collections.defaultdict(list) for _ in range(E)]
+    backups, rep_log, active_log = {}, [], []
+    t = 0
+    while t < T or inj.pending or t < T + 4:
+        if t == LEAVE:
+            backup = ctl.leave(SHARD)
+            assert backup is not None and backup != SHARD
+            backups = {SHARD: backup}
+        if t == JOIN:
+            ctl.join(SHARD)
+        drain = t >= T
+        base = stream[t] if not drain else (
+            np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32))
+        items, ts, offered, replay = inj.inject(t, *base,
+                                                fresh=not drain,
+                                                backups=backups)
+        origin = inj.origin.copy()
+        active_log.append(fx.active)
+        state, out = fx.step(state, jnp.asarray(items), jnp.asarray(ts),
+                             offered=jnp.asarray(offered),
+                             replay=jnp.asarray(replay))
+        ctl.tick(state, step_times=sched.stall_time(t, E))
+        rep_log.append((replay.copy(), offered.copy()))
+        for e in range(E):
+            if origin[e] >= 0:       # attribute output rows per STREAM
+                collect(out, e, churned[int(origin[e])])
+        t += 1
+    assert inj.pending == 0
+    churned = [cat(c) for c in churned]
+    md = state.metrics.as_dict()
+
+    # 1. the departed slot really was out of the membership, then back
+    assert any(not a[SHARD] for a in active_log)
+    assert active_log[-1][SHARD]
+
+    # 2. replayed == exact host-side recomputation (offered slots on
+    #    replay-flagged uplinks), landed on the backup, nothing dropped
+    exp_rep = sum(int(off[rep].sum()) for rep, off in rep_log)
+    assert md["shard"]["items_replayed"][backup] == exp_rep > 0, \\
+        (md["shard"]["items_replayed"], exp_rep)
+    assert sum(md["shard"]["items_replayed"]) == exp_rep
+    assert md["shard"]["items_late"] == [0] * E
+    # the backup's own delayed stream came through the catch-up path
+    assert md["late_excluded"][backup] > 0
+
+    # 3. per-stream output equals the healthy-fleet oracle
+    for e in range(E):
+        assert churned[e]["agg"].shape == oracle[e]["agg"].shape, e
+        np.testing.assert_allclose(churned[e]["agg"], oracle[e]["agg"],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(e))
+        np.testing.assert_array_equal(churned[e]["cons"],
+                                      oracle[e]["cons"], err_msg=str(e))
+        np.testing.assert_allclose(churned[e]["outs"], oracle[e]["outs"],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(e))
+
+    # 4. membership is an operand: the whole churned run is ONE trace
+    assert fx.trace_count == 1, fx.trace_count
+    assert fx.trace_count <= ctl.max_trace_count
+    print("CHURN_OK", exp_rep)
+
+    # --- short no-backup departure: the joiner drains the queued
+    # backlog through the catch-up path — never the late-drop path.
+    # (A departure shorter than the lag detector's ramp used to rejoin
+    # "healthy" and silently late-drop its own backlog.) -------------
+    fx4 = make_fleet()
+    ctl4 = FleetController(
+        fx4, budget_policy=ElasticBudget(min_budget=64, max_budget=64))
+    sched4 = FaultSchedule(churn=[Churn(shard=3, leave=5, join=7)])
+    inj4 = FaultInjector(sched4)
+    st4 = fx4.init_state(D)
+    t = 0
+    while t < 10 or inj4.pending:
+        if t == 5:
+            ctl4.leave(3)          # backup ignored: records wait
+        if t == 7:
+            ctl4.join(3)
+        drain = t >= 10
+        base = stream[t] if not drain else (
+            np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32))
+        items, ts, offered, replay = inj4.inject(t, *base,
+                                                 fresh=not drain)
+        st4, _ = fx4.step(st4, jnp.asarray(items), jnp.asarray(ts),
+                          offered=jnp.asarray(offered),
+                          replay=jnp.asarray(replay))
+        ctl4.tick(st4, step_times=sched4.stall_time(t, E))
+        t += 1
+    md4 = st4.metrics.as_dict()
+    assert md4["shard"]["items_late"] == [0] * E, \\
+        md4["shard"]["items_late"]
+    assert md4["late_excluded"][3] > 0       # counted, not dropped
+    assert fx4.trace_count == 1
+    print("JOIN_CATCHUP_OK", md4["late_excluded"][3])
+
+    # --- true re-mesh: shrink (migrate + fold) then grow (joiner) ------
+    E2 = 4
+    fx2 = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E2, num_core=2,
+                    core_budget=64),
+        engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine))
+    ctl2 = FleetController(
+        fx2, budget_policy=ElasticBudget(min_budget=64, max_budget=64))
+    st = fx2.init_state(D)
+
+    def feed(t, e):
+        items = rng.standard_normal((e, BATCH, D)).astype(np.float32)
+        items[:, :, 0] += (t % 3 == 0) * 1.5
+        ts = np.tile(t * BATCH + np.arange(BATCH, dtype=np.float32),
+                     (e, 1))
+        return jnp.asarray(items), jnp.asarray(ts)
+
+    for t in range(3):
+        st, _ = fx2.step(st, *feed(t, E2))
+        ctl2.tick(st, step_times=np.full(E2, 0.1))
+    assert fx2.trace_count == 1
+
+    # device 1 dies for real: mesh over the 3 survivors
+    st, payload = ctl2.remesh(st, [devs[0], devs[2], devs[3]],
+                              keep=[0, 2, 3])
+    assert fx2.cfg.num_shards == 3 and fx2.mesh.shape["edge"] == 3
+    assert list(payload) == [1]          # departed ring came back (empty
+    assert payload[1].shape[0] == 0      # here: drained every tick)
+    for t in range(3, 6):
+        st, _ = fx2.step(st, *feed(t, 3))
+        dec = ctl2.tick(st, step_times=np.full(3, 0.1))
+        # the escalation baseline folded with the counters: the first
+        # post-shrink tick must see only THIS tick's demand, not the
+        # departed shard's lifetime count as a phantom spike
+        assert (dec.escalated >= 0).all(), dec.escalated
+        assert dec.escalated.sum() <= 3 * scfg.windows_per_step, \\
+            dec.escalated
+    md2 = st.metrics.as_dict()
+    assert fx2.trace_count == 2 <= ctl2.max_trace_count == 2
+    # surviving rows migrated (kept counting); the departed row's
+    # counters folded into its backup, so fleet totals kept its history
+    assert sorted(md2["shard"]["steps"]) == [6, 6, 9], md2["shard"]
+    assert sum(md2["shard"]["items_offered"]) == (3 * 4 + 3 * 3) * BATCH
+    assert md2["shard"]["items_late"] == [0] * 3
+
+    # a replacement arrives: grow back to 4 with a fresh tail row
+    st, payload = ctl2.remesh(st, devs[:4], keep=[0, 1, 2, None])
+    assert fx2.cfg.num_shards == 4 and payload == {}
+    for t in range(6, 8):
+        st, _ = fx2.step(st, *feed(t, 4))
+        ctl2.tick(st, step_times=np.full(4, 0.1))
+    md2 = st.metrics.as_dict()
+    assert fx2.trace_count == 3 <= ctl2.max_trace_count == 3
+    assert md2["shard"]["steps"][3] == 2         # joiner started fresh
+    assert md2["shard"]["windows_emitted"][3] > 0  # ... and is live
+    assert md2["shard"]["items_late"] == [0] * 4
+    print("REMESH_FLEET_OK", fx2.trace_count)
+""")
+
+
+def test_fleet_churn(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = tmp_path / "fleet_churn.py"
+    script.write_text(_SCRIPT)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "REMESH_OK" in out.stdout
+    assert "CHURN_OK" in out.stdout
+    assert "JOIN_CATCHUP_OK" in out.stdout
+    assert "REMESH_FLEET_OK" in out.stdout
+
+
+def test_injector_tolerates_none_backup():
+    """``FleetController.leave`` returns None when no healthy rank is
+    left; a backups entry carrying that None must make the replay queue
+    *wait*, not corrupt the feed (None indexes numpy as np.newaxis and
+    would broadcast the replay chunk over the whole fleet)."""
+    from repro.stream.fleet import Churn, FaultInjector, FaultSchedule
+
+    inj = FaultInjector(FaultSchedule(churn=[Churn(shard=1, leave=0)]))
+    base_items = np.arange(4 * 8 * 2, dtype=np.float32).reshape(4, 8, 2)
+    base_ts = np.tile(np.arange(8, dtype=np.float32), (4, 1))
+    for tick in range(2):
+        items, ts, offered, replay = inj.inject(
+            tick, base_items + tick, base_ts + 8 * tick,
+            backups={1: None})
+        assert not replay.any()
+        assert not offered[1].any()              # departed slot is blank
+        np.testing.assert_array_equal(          # nobody else was touched
+            items[[0, 2, 3]], (base_items + tick)[[0, 2, 3]])
+        assert offered[[0, 2, 3]].all()
+    assert inj.pending == 2                      # the stream just waits
+
+
+def test_replay_rejects_sliding_carry():
+    """Batch-granular replay is tumbling-only: with a sliding carry the
+    backup's own samples would smear into the replayed stream's
+    windows — the executor must refuse loudly, not corrupt silently."""
+    import pytest
+
+    engine = rules.RuleEngine([
+        rules.threshold_rule("never", 0, ">=", 1e9, rules.C_SEND_CORE)])
+    edge_fn = lambda p, b: (b, b[:, :5])  # noqa: E731
+    scfg = StreamConfig(micro_batch=16, window=16, stride=8, capacity=64)
+    ex = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=1, num_core=1, core_budget=4),
+        engine, pipe.two_tier_pipeline(edge_fn, edge_fn, engine))
+    state = ex.init_state(3)
+    items = jnp.zeros((1, 16, 3), jnp.float32)
+    ts = jnp.arange(16, dtype=jnp.float32)[None]
+    state, _ = ex.step(state, items, ts)      # no replay: sliding is fine
+    with pytest.raises(ValueError, match="tumbling"):
+        ex.step(state, items, ts, replay=np.array([True]))
+
+
+def test_step_times_execution_not_dispatch():
+    """``last_step_seconds`` is the default wall-time straggler signal:
+    it must include device execution, not just async host dispatch.  A
+    step whose edge stage sleeps on-device (pure_callback) must inflate
+    the reading by at least the sleep."""
+    sleep_s = 0.2
+
+    def slow_edge(p, b):
+        def _sleep(x):
+            time.sleep(sleep_s)
+            return x
+        return (jax.pure_callback(_sleep,
+                                  jax.ShapeDtypeStruct(b.shape, b.dtype),
+                                  b),
+                b[:, :5])
+
+    core_fn = lambda p, b: (b, b[:, :5])  # noqa: E731
+    engine = rules.RuleEngine([
+        rules.threshold_rule("never", 0, ">=", 1e9, rules.C_SEND_CORE)])
+    scfg = StreamConfig(micro_batch=16, window=16, stride=16, capacity=64)
+    ex = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=1, num_core=1, core_budget=4),
+        engine, pipe.two_tier_pipeline(slow_edge, core_fn, engine))
+    state = ex.init_state(3)
+    items = np.zeros((1, 16, 3), np.float32)
+    ts = np.arange(16, dtype=np.float32)[None]
+    state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts))
+    state, out = ex.step(state, jnp.asarray(items), jnp.asarray(ts + 16))
+    # a dispatch-only clock reads ~0 here; the step really slept
+    assert ex.last_step_seconds >= sleep_s * 0.9, ex.last_step_seconds
+    # and the reading is the whole execution: nothing left to block on
+    t0 = time.perf_counter()
+    jax.block_until_ready(out)
+    assert time.perf_counter() - t0 < sleep_s / 2

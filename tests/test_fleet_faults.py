@@ -137,7 +137,7 @@ _SCRIPT = textwrap.dedent("""
                     np.zeros((E, BATCH), np.float32))
         else:
             base = stream[t]
-        items, ts, offered = inj.inject(t, *base, fresh=not drain)
+        items, ts, offered, _ = inj.inject(t, *base, fresh=not drain)
         mask_log.append(fx.health)                 # mask used THIS tick
         offer_log.append((offered[SHARD].any(), ts[SHARD].copy()))
         state, out = fx.step(state, jnp.asarray(items), jnp.asarray(ts),

@@ -12,6 +12,7 @@ from repro.core import routing, sfc
 from repro.data import create, dequeue, enqueue, size
 from repro.kernels.armatch import armatch, armatch_ref
 from repro.runtime.compression import dequantize, quantize
+from repro.runtime.elastic import ElasticBudget
 from repro.runtime.straggler import StragglerDetector
 
 SET = settings(max_examples=25, deadline=None)
@@ -197,3 +198,36 @@ def test_quantize_error_bound(seed, scale):
     c = quantize(g)
     err = np.abs(np.asarray(dequantize(c)) - np.asarray(g)).max()
     assert err <= float(c.scale) * 0.5 + 1e-6
+
+
+@SET
+@given(max_budget=st.integers(1, 256),
+       patience=st.integers(1, 4),
+       ticks=st.integers(1, 24))
+def test_elastic_budget_saturated_noop_keeps_patience(max_budget, patience,
+                                                      ticks):
+    """Sustained pressure at the budget ceiling (and idleness at the
+    floor) is a *no-op* proposal: it must be idempotent and must not
+    consume patience — the counters stay monotone, so the moment
+    headroom appears the resize fires immediately instead of re-paying
+    full patience for every 'resize' to the same value."""
+    eb = ElasticBudget(min_budget=1, max_budget=max_budget,
+                       patience=patience)
+    hot = []
+    for _ in range(ticks):
+        assert eb.propose(2 * max_budget, max_budget) == max_budget
+        hot.append(eb._hot)
+    assert hot == list(range(1, ticks + 1))        # monotone, never reset
+    if ticks >= patience and max_budget > 1:
+        # headroom appears: accrued patience fires the grow at once
+        assert eb.propose(2 * max_budget, max_budget - 1) == max_budget
+
+    eb2 = ElasticBudget(min_budget=max(1, max_budget // 4),
+                        max_budget=max_budget, patience=patience)
+    cold = []
+    for _ in range(ticks):                         # idle at the floor
+        assert eb2.propose(0, eb2.min_budget) == eb2.min_budget
+        cold.append(eb2._cold)
+    assert cold == list(range(1, ticks + 1))
+    if ticks >= patience and eb2.min_budget < max_budget:
+        assert eb2.propose(0, eb2.min_budget + 1) == eb2.min_budget

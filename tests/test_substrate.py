@@ -173,6 +173,30 @@ def test_straggler_zero_median_guard():
     assert det2.stragglers() == [3]
 
 
+def test_straggler_reassignment_before_any_observation():
+    """A backup can be needed before any telemetry exists (a leave at
+    tick 0, or right after a re-mesh rebuilds the detectors): the plan
+    must fall back to deterministic index order, not crash on the
+    empty history."""
+    det = StragglerDetector(4)
+    assert det.reassignment([1]) == {1: 0}
+    assert det.reassignment([0, 1]) == {0: 2, 1: 3}
+    assert det.stragglers() == []
+
+
+def test_straggler_observe_rejects_wrong_shape():
+    """Misaligned telemetry (wrong rank count, extra dims, a scalar)
+    must fail loudly — silently broadcasting it would flag the wrong
+    ranks, and a reassignment plan built on that re-executes shards on
+    the very devices that are struggling."""
+    det = StragglerDetector(4)
+    for bad in (np.zeros(3), np.zeros(5), np.zeros((4, 1)),
+                np.float64(0.1)):
+        with pytest.raises(ValueError, match=r"step_times"):
+            det.observe(bad)
+    det.observe(np.zeros(4))               # the right shape still works
+
+
 # ---------------------------------------------------------------- compression
 
 def test_error_feedback_accumulates():
