@@ -1,10 +1,29 @@
-"""Timing helpers for the benchmark harness (CSV rows, stable medians)."""
+"""Timing helpers for the benchmark harness (CSV rows, stable medians).
+
+Every ``row()`` both prints the CSV line and records it in a
+module-level collector, so ``run.py --json`` can snapshot a suite's
+rows into a ``BENCH_<suite>.json`` artifact (see ``repro.obs.export``)
+without re-parsing stdout.  Subprocess-based suites feed their child's
+stdout back through :func:`emit_line` to land in the same collector.
+"""
 from __future__ import annotations
 
 import time
 from typing import Callable
 
 import jax
+
+#: Rows collected since the last :func:`reset_rows` (dicts with
+#: ``name``/``us_per_call``/``derived``) — the --json artifact source.
+ROWS: list[dict] = []
+
+
+def reset_rows() -> None:
+    ROWS.clear()
+
+
+def get_rows() -> list[dict]:
+    return list(ROWS)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -43,5 +62,21 @@ def time_stateful(fn: Callable, state, *args, warmup: int = 2,
 
 def row(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.1f},{derived}"
+    ROWS.append({"name": name, "us_per_call": float(us),
+                 "derived": derived})
+    print(line, flush=True)
+    return line
+
+
+def emit_line(line: str) -> str:
+    """Re-emit one ``name,us,derived`` CSV line from a child process
+    through :func:`row` (collector + stdout).  Non-row lines (warnings
+    a child printed to stdout) pass through unrecorded."""
+    parts = line.split(",", 2)
+    if len(parts) == 3:
+        try:
+            return row(parts[0], float(parts[1]), parts[2])
+        except ValueError:
+            pass
     print(line, flush=True)
     return line

@@ -50,8 +50,9 @@ def bench(faults: bool = False, churn: bool = False):
     if out.returncode != 0:
         raise RuntimeError("fleet bench subprocess failed:\n"
                            + out.stderr[-2000:])
+    from benchmarks.common import emit_line
     for line in out.stdout.strip().splitlines():
-        print(line, flush=True)
+        emit_line(line)                # re-record for run.py --json
 
 
 def _child():
@@ -121,6 +122,12 @@ def _child():
             f"/{m['fleet']['windows_emitted']}"
             f";overflow={m['fleet_core_overflow']}"
             f";traces={ex.trace_count}")
+        # the in-step device histogram's view of the same run (includes
+        # warmup/compile ticks — its p99 bounds the host-measured one)
+        h = ex.latency_percentiles()
+        row(f"fleet/E{e}_hist", h["p50_us"],
+            f"hist_p95_us={h['p95_us']:.1f}"
+            f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}")
 
 
 def _hot_fixture():
@@ -171,6 +178,7 @@ def _child_faults():
     import numpy as np
 
     from benchmarks.common import row
+    from repro.obs import EventLog, Tracer
     from repro.runtime.elastic import ElasticBudget
     from repro.runtime.straggler import StragglerDetector
     from repro.stream.fleet import (Fault, FaultInjector, FaultSchedule,
@@ -185,16 +193,23 @@ def _child_faults():
         FleetConfig(stream=scfg, num_shards=E, num_core=2,
                     core_budget=4, core_budget_max=16),
         engine, make_pipeline())
+    # observability rides the measured run: host spans + control-plane
+    # event log (JSONL to $REPRO_OBS_EVENTS if set), instrumentation on
+    # while the trace bound below is asserted
+    tracer = Tracer()
+    log = EventLog(os.environ.get("REPRO_OBS_EVENTS"))
+    ex.set_tracer(tracer)
     ctl = FleetController(
         ex,
         budget_policy=ElasticBudget(min_budget=2, max_budget=64,
                                     patience=2),
         wall_detector=StragglerDetector(E, window=3, threshold=3.0,
-                                        patience=2))
+                                        patience=2),
+        event_log=log, tracer=tracer)
     state = ex.init_state(D)
 
     rng = np.random.default_rng(7)
-    inj = FaultInjector(sched)
+    inj = FaultInjector(sched, event_log=log)
     lat, budgets, t0 = [], [], 0.0
     for i in range(steps):
         base = rng.standard_normal((E, BATCH, D)).astype(np.float32)
@@ -202,7 +217,8 @@ def _child_faults():
             base[:, :, 0] += 0.5           # alternating hot regime
         ts = np.tile(t0 + np.arange(BATCH, dtype=np.float32), (E, 1))
         t0 += BATCH
-        base, ts, offered, _ = inj.inject(i, base, ts)
+        with tracer.span("inject", tick=i):
+            base, ts, offered, _ = inj.inject(i, base, ts)
         t = time.perf_counter()
         state, out = ex.step(state, jnp.asarray(base), jnp.asarray(ts),
                              offered=jnp.asarray(offered))
@@ -237,6 +253,20 @@ def _child_faults():
         f";esc={m['fleet']['windows_escalated']}"
         f";overflow={m['fleet_core_overflow']}"
         f";traces={ex.trace_count}")
+    # the observability surface of the same degraded run: the event log
+    # must reconstruct (causally ordered), and the in-step device
+    # histogram yields percentiles without having cost a retrace
+    EventLog.validate(log.records)
+    h = ex.latency_percentiles()
+    row("fleet/faults_hist", h["p50_us"],
+        f"hist_p95_us={h['p95_us']:.1f}"
+        f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}")
+    row("fleet/faults_events", float(len(log)),
+        f"resizes={len(log.of_kind('budget_resize'))}"
+        f";health={len(log.of_kind('health_change'))}"
+        f";stalls={len(log.of_kind('stall_buffer'))}"
+        f";drains={len(log.of_kind('backlog_drain'))}")
+    log.close()
 
 
 def _child_churn():
@@ -251,6 +281,7 @@ def _child_churn():
     import numpy as np
 
     from benchmarks.common import row
+    from repro.obs import EventLog, Tracer
     from repro.runtime.elastic import ElasticBudget
     from repro.stream.fleet import (Churn, FaultInjector, FaultSchedule,
                                     FleetConfig, FleetController,
@@ -294,11 +325,18 @@ def _child_churn():
             collect(out, e, oracle[e])
 
     ex = make_fleet()
+    # the churned (measured) run carries the full observability surface;
+    # the oracle stays bare so the equality check compares pipelines,
+    # not instrumentation
+    tracer = Tracer()
+    log = EventLog(os.environ.get("REPRO_OBS_EVENTS"))
+    ex.set_tracer(tracer)
     ctl = FleetController(
         ex, budget_policy=ElasticBudget(min_budget=budget,
-                                        max_budget=budget))
+                                        max_budget=budget),
+        event_log=log, tracer=tracer)
     state = ex.init_state(D)
-    inj = FaultInjector(sched)
+    inj = FaultInjector(sched, event_log=log)
     churned = [[] for _ in range(E)]
     backups, lat, rep_expected = {}, [], 0
     for i in range(steps):
@@ -377,6 +415,20 @@ def _child_churn():
         f";remeshes={ex.remeshes}")
     row("fleet/churn_remesh_step", float(remesh_lat * 1e6),
         f"shards={E}->{E - 1};retrace=1")
+    # the whole leave -> replay -> join -> remesh arc as an event log:
+    # parseable, causally ordered, every membership decision accounted
+    EventLog.validate(log.records)
+    assert len(log.of_kind("leave")) == 1
+    assert len(log.of_kind("backup_assign")) == 1
+    assert len(log.of_kind("join")) == 1
+    assert len(log.of_kind("remesh")) == 1
+    h = ex.latency_percentiles()
+    row("fleet/churn_events", float(len(log)),
+        f"replay_q={len(log.of_kind('replay_queue'))}"
+        f";replay_d={len(log.of_kind('replay_delivery'))}"
+        f";slot_drains={len(log.of_kind('slot_drain'))}"
+        f";hist_p99_us={h['p99_us']:.1f}")
+    log.close()
 
 
 if __name__ == "__main__":

@@ -2,13 +2,19 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (assignment format).
 
-  PYTHONPATH=src python -m benchmarks.run             # all
-  PYTHONPATH=src python -m benchmarks.run messaging   # one
+  PYTHONPATH=src python -m benchmarks.run                 # all suites
+  PYTHONPATH=src python -m benchmarks.run messaging       # one suite
+  PYTHONPATH=src python -m benchmarks.run fleet --json    # + BENCH file
+
+``--json`` additionally writes one ``BENCH_<suite>.json`` artifact per
+suite (stable schema, see ``repro.obs.export``) — the committed
+baselines the perf trajectory is measured against.  Unknown suite
+names exit 2 with a usage message.
 """
 import sys
 
-from benchmarks import (fleet, messaging, pipeline_e2e, routing, scaling,
-                        store_query, streaming, tiering)
+from benchmarks import (common, fleet, messaging, pipeline_e2e, routing,
+                        scaling, store_query, streaming, tiering)
 
 SUITES = {
     "tiering": tiering.bench,          # paper Table I
@@ -26,11 +32,29 @@ SUITES = {
 }
 
 
-def main() -> None:
-    which = sys.argv[1:] or list(SUITES)
+def usage() -> str:
+    return ("usage: python -m benchmarks.run [suite ...] [--json]\n"
+            "known suites: " + " ".join(sorted(SUITES)))
+
+
+def main(argv: list | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_mode = "--json" in argv
+    names = [a for a in argv if a != "--json"]
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        print(f"unknown suite(s): {', '.join(unknown)}\n{usage()}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    which = names or list(SUITES)
     print("name,us_per_call,derived")
     for name in which:
+        common.reset_rows()
         SUITES[name]()
+        if json_mode:
+            from repro.obs import export as OX
+            path = OX.write_bench(OX.bench_payload(name, common.get_rows()))
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -90,6 +90,12 @@ def bench():
         row(f"streaming/{backend}_p99", p99,
             f"esc={m['windows_escalated']}/{m['windows_emitted']}"
             f";traces={ex.trace_count}")
+        # the in-step device histogram's view of the same run (includes
+        # warmup/compile ticks — its p99 bounds the host-measured one)
+        h = ex.latency_percentiles()
+        row(f"streaming/{backend}_hist", h["p50_us"],
+            f"hist_p95_us={h['p95_us']:.1f}"
+            f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}")
 
 
 if __name__ == "__main__":

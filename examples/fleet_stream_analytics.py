@@ -44,6 +44,7 @@ import numpy as np                          # noqa: E402
 
 from repro.core import pipeline as pipe     # noqa: E402
 from repro.core import rules                # noqa: E402
+from repro.obs import EventLog, Tracer      # noqa: E402
 from repro.runtime.elastic import ElasticBudget            # noqa: E402
 from repro.runtime.straggler import StragglerDetector      # noqa: E402
 from repro.stream import StreamConfig       # noqa: E402
@@ -94,14 +95,21 @@ def main():
     cfg = FleetConfig(stream=scfg, num_shards=E, num_core=2,
                       core_budget=CORE_BUDGET, core_budget_max=16)
     ex = FleetExecutor(cfg, engine, pl)
+    # full observability rides along: host spans + device named scopes
+    # via the tracer, every control-plane decision in the event log
+    # (JSONL to $REPRO_OBS_EVENTS if set, in-memory otherwise)
+    tracer = Tracer()
+    log = EventLog(os.environ.get("REPRO_OBS_EVENTS"))
+    ex.set_tracer(tracer)
     ctl = FleetController(
         ex,
         budget_policy=ElasticBudget(min_budget=2, max_budget=32,
                                     patience=2),
         wall_detector=StragglerDetector(E, window=3, threshold=3.0,
-                                        patience=2))
+                                        patience=2),
+        event_log=log, tracer=tracer)
     sched = FaultSchedule([DEAD], churn=[GONE])
-    inj = FaultInjector(sched)
+    inj = FaultInjector(sched, event_log=log)
     state = ex.init_state(D)
 
     rng = np.random.default_rng(42)
@@ -185,6 +193,21 @@ def main():
     print(f"final budget {ex.core_budget} after {ctl.resizes} elastic "
           f"resizes; fleet step traced {ex.trace_count} time(s) "
           f"(bound: {ctl.max_trace_count})")
+
+    # the observability layer's view of the same run
+    lat = ex.latency_percentiles()
+    print(f"\nstep latency (in-step device histogram, {lat['count']} "
+          f"samples): p50 {lat['p50_us']:.0f}us, p95 {lat['p95_us']:.0f}us,"
+          f" p99 {lat['p99_us']:.0f}us")
+    disp = tracer.stage_percentiles().get("fleet.dispatch", {})
+    print(f"host dispatch span: p50 {disp.get('p50_us', 0.0):.0f}us over "
+          f"{disp.get('count', 0)} ticks")
+    EventLog.validate(log.records)
+    kinds = sorted({r["kind"] for r in log.records})
+    print(f"event log: {len(log)} causally-ordered records "
+          f"({', '.join(kinds)})"
+          + (f" -> {log.path}" if log.path else ""))
+    log.close()
 
 
 if __name__ == "__main__":

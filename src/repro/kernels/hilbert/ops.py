@@ -11,9 +11,17 @@ from repro.kernels.hilbert.hilbert import BLOCK_ROWS, LANES, hilbert_xy2d_2d
 
 
 @functools.partial(jax.jit, static_argnames=("order", "interpret"))
+def _tile(xp: jnp.ndarray, yp: jnp.ndarray, order: int,
+          interpret: bool) -> jnp.ndarray:
+    return hilbert_xy2d_2d(xp, yp, order, interpret=interpret)
+
+
 def hilbert_xy2d(x: jnp.ndarray, y: jnp.ndarray, order: int = 16,
                  *, interpret: bool = False) -> jnp.ndarray:
     """Batched Hilbert index: any-shape int32 x/y -> same-shape int32 d."""
+    # pad/slice stay outside the jit: XLA's CPU backend chokes (minutes
+    # of compile) when a pad feeds the interpret-mode pallas graph, so
+    # only the fixed-shape tile call is compiled
     shape = x.shape
     xf = jnp.ravel(jnp.asarray(x, jnp.int32))
     yf = jnp.ravel(jnp.asarray(y, jnp.int32))
@@ -22,5 +30,5 @@ def hilbert_xy2d(x: jnp.ndarray, y: jnp.ndarray, order: int = 16,
     pad = (-n) % tile
     xp = jnp.pad(xf, (0, pad)).reshape(-1, LANES)
     yp = jnp.pad(yf, (0, pad)).reshape(-1, LANES)
-    d = hilbert_xy2d_2d(xp, yp, order, interpret=interpret)
+    d = _tile(xp, yp, order, interpret)
     return d.reshape(-1)[:n].reshape(shape)

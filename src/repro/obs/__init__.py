@@ -1,0 +1,35 @@
+"""Fleet-wide observability: tracing, event log, latency, exporters.
+
+The measurement substrate the perf roadmap is judged against — four
+pieces, each usable alone:
+
+* ``obs.trace`` — host-side span tracer (Chrome-trace/Perfetto export)
+  with JAX profiler hooks (``TraceAnnotation``/``StepTraceAnnotation``)
+  so host phases and device stages line up on one timeline.
+* ``obs.events`` — structured JSONL event log for the control plane:
+  every decision (budget resize, health change, leave/join, remesh,
+  backup replay, drains) as one typed record with tick, wall time,
+  shard, and cause, so a churn arc can be reconstructed post-hoc.
+* ``obs.latency`` — bucketed latency histogram maintained *inside* the
+  traced step (fixed-shape operand: no recompiles, trace-count bounds
+  preserved) with host-side percentile extraction.
+* ``obs.export`` — stable-schema snapshots of ``StreamMetrics`` /
+  ``FleetMetrics`` + latency percentiles + per-stage timings, and the
+  ``BENCH_<suite>.json`` artifact writer behind
+  ``benchmarks/run.py --json``.
+"""
+from repro.obs.events import EVENT_KINDS, EventLog  # noqa: F401
+from repro.obs.export import (  # noqa: F401
+    BENCH_SCHEMA_VERSION,
+    bench_payload,
+    metrics_snapshot,
+    parse_derived,
+    write_bench,
+)
+from repro.obs.latency import (  # noqa: F401
+    DEFAULT_EDGES,
+    histogram_init,
+    histogram_percentiles,
+    histogram_update,
+)
+from repro.obs.trace import NULL_TRACER, Tracer  # noqa: F401

@@ -1,0 +1,108 @@
+"""Metrics registry + BENCH artifact exporter (stable schema).
+
+Two snapshot shapes, both golden-key tested so a refactor can never
+silently drop or rename a counter the perf trajectory depends on:
+
+* :func:`metrics_snapshot` — one executor's full observability state:
+  ``StreamMetrics``/``FleetMetrics`` counters, the in-step latency
+  histogram's percentiles, the tracer's per-stage breakdown, and the
+  trace count, in one dict.
+* :func:`bench_payload` / :func:`write_bench` — the committed
+  ``BENCH_<suite>.json`` artifact behind ``benchmarks/run.py --json``:
+  the suite's CSV rows (``derived`` parsed into a dict) plus platform
+  provenance.  Written atomically (``BENCH_<suite>.tmp`` then rename),
+  so an interrupted run never half-overwrites a committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+BENCH_SCHEMA_VERSION = 1
+
+#: Golden top-level keys of a BENCH artifact (tests pin this).
+BENCH_KEYS = ("schema_version", "suite", "created_unix", "platform", "rows")
+
+#: Golden top-level keys of a metrics snapshot (tests pin this).
+SNAPSHOT_KEYS = ("schema_version", "kind", "metrics", "latency", "stages",
+                 "trace_count")
+
+
+def parse_derived(derived: str) -> dict:
+    """Parse a CSV row's ``derived`` column (``k=v;k=v`` pairs, ints
+    and floats coerced; bare tokens map to ``True``)."""
+    out: dict = {}
+    for part in filter(None, (derived or "").split(";")):
+        if "=" not in part:
+            out[part] = True
+            continue
+        k, v = part.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = v
+    return out
+
+
+def _platform() -> dict:
+    import jax
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax": jax.__version__,
+        "python": sys.version.split()[0],
+    }
+
+
+def bench_payload(suite: str, rows: list[dict]) -> dict:
+    """BENCH artifact dict for one suite.  ``rows`` are the harness's
+    collected ``{"name", "us_per_call", "derived"}`` records (see
+    ``benchmarks.common.row``); ``derived`` strings are parsed."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "suite": suite,
+        "created_unix": time.time(),
+        "platform": _platform(),
+        "rows": [{"name": r["name"],
+                  "us_per_call": float(r["us_per_call"]),
+                  "derived": parse_derived(r["derived"])
+                  if isinstance(r["derived"], str) else dict(r["derived"])}
+                 for r in rows],
+    }
+
+
+def write_bench(payload: dict, directory: str = ".") -> str:
+    """Write ``BENCH_<suite>.json`` atomically; returns the path."""
+    path = os.path.join(directory, f"BENCH_{payload['suite']}.json")
+    tmp = os.path.join(directory, f"BENCH_{payload['suite']}.tmp")
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=False)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def metrics_snapshot(executor, state, kind: str | None = None) -> dict:
+    """One executor's observability state as a stable-schema dict.
+
+    ``executor`` is a ``StreamExecutor`` or ``FleetExecutor`` (anything
+    with ``trace_count``, ``latency_percentiles()`` and a ``tracer``);
+    ``state`` the matching state whose ``metrics.as_dict()`` is the
+    counter snapshot.  ``kind`` defaults to the executor class name.
+    """
+    tracer = getattr(executor, "tracer", None)
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "kind": kind or type(executor).__name__,
+        "metrics": state.metrics.as_dict(),
+        "latency": executor.latency_percentiles(),
+        "stages": tracer.stage_percentiles()
+        if tracer is not None and tracer.enabled else {},
+        "trace_count": executor.trace_count,
+    }

@@ -1,0 +1,64 @@
+"""Bucketed latency histogram carried *inside* the traced step.
+
+Host-side percentile tracking (a python list of floats) can't ride a
+donated jit step, and pulling every step's wall time to a host list
+costs a sync per tick.  Instead the executors keep latency as an
+**on-device bucketed histogram**: a fixed-shape int32 counts array
+passed through the step as a donated operand, bucket-incremented by
+the *previous* step's measured wall time (an f32 scalar operand).
+Shapes never change, so instrumentation adds **zero** recompiles and
+every existing trace-count bound survives; percentiles are extracted
+host-side on demand (one transfer for the whole histogram).
+
+Buckets are log-spaced (``DEFAULT_EDGES``: 1 µs .. 100 s, ~17% ratio
+per bucket), so a reported percentile is exact to within one bucket
+ratio — ample for p50/p95/p99 step-latency reporting, and the
+resolution is a static constant, not data.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Log-spaced bucket upper edges in seconds: 1 µs .. 100 s, 121 edges
+#: (122 buckets with the overflow bucket), ratio 10^(8/120) ~= 1.166.
+DEFAULT_EDGES = np.logspace(-6.0, 2.0, 121)
+
+
+def histogram_init(edges: np.ndarray = DEFAULT_EDGES) -> jnp.ndarray:
+    """Zeroed counts: one bucket per edge plus the overflow bucket."""
+    return jnp.zeros((len(edges) + 1,), jnp.int32)
+
+
+def histogram_update(counts: jnp.ndarray, value,
+                     edges: np.ndarray = DEFAULT_EDGES) -> jnp.ndarray:
+    """Bucket-increment ``counts`` with one sample (traced; fixed
+    shape).  Non-positive values are *skipped*, not bucketed — the
+    executors feed the previous step's wall time, which is 0.0 before
+    the first step (a missing measurement, not a fast step)."""
+    value = jnp.asarray(value, jnp.float32)
+    idx = jnp.searchsorted(jnp.asarray(edges, jnp.float32), value)
+    return counts.at[idx].add(jnp.where(value > 0.0, 1, 0).astype(counts.dtype))
+
+
+def histogram_percentiles(counts, qs=(50, 95, 99),
+                          edges: np.ndarray = DEFAULT_EDGES) -> dict:
+    """Host-side percentile extraction: ``{"count": n, "p50_us": ...}``
+    (microseconds).  A percentile is the upper edge of the bucket where
+    the CDF crosses it (conservative: never under-reports; exact to one
+    bucket ratio).  All-empty histograms report 0.0s."""
+    c = np.asarray(counts, np.int64)
+    total = int(c.sum())
+    out = {"count": total}
+    if total == 0:
+        for q in qs:
+            out[f"p{q}_us"] = 0.0
+        return out
+    cdf = np.cumsum(c)
+    # value for bucket i is edges[i] (its upper edge); the overflow
+    # bucket clamps to the last edge — off-scale-high, still monotone
+    uppers = np.append(edges, edges[-1])
+    for q in qs:
+        idx = int(np.searchsorted(cdf, q / 100.0 * total))
+        out[f"p{q}_us"] = float(uppers[min(idx, len(uppers) - 1)] * 1e6)
+    return out

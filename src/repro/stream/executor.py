@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from repro.core import rules as R
 from repro.core.pipeline import DataDrivenPipeline
 from repro.data import ringbuffer as rbuf
+from repro.obs import latency as OL
+from repro.obs.trace import NULL_TRACER
 from repro.stream import windows as W
 
 
@@ -189,21 +191,22 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
     """
     n_in = items.shape[0]
     held = state.rb.head - state.rb.tail       # rows queued before this offer
-    rows_in = jnp.concatenate(
-        [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
-        axis=1)
-    if offer_mask is None:
-        rb, n_acc = rbuf.enqueue(state.rb, rows_in)
-        n_offered = jnp.int32(n_in)
-    else:
-        rb, n_acc = rbuf.enqueue(state.rb, rows_in, offer_mask)
-        n_offered = jnp.sum(offer_mask.astype(jnp.int32))
-
-    rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
+    with jax.named_scope("obs:ingest"):
+        rows_in = jnp.concatenate(
+            [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
+            axis=1)
+        if offer_mask is None:
+            rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+            n_offered = jnp.int32(n_in)
+        else:
+            rb, n_acc = rbuf.enqueue(state.rb, rows_in, offer_mask)
+            n_offered = jnp.sum(offer_mask.astype(jnp.int32))
+        rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
     wm = state.max_ts if watermark_ts is None else watermark_ts
     dequeued = valid
-    valid, n_late, max_ts = W.apply_watermark(
-        rows[:, 0], valid, wm, cfg.lateness)
+    with jax.named_scope("obs:watermark"):
+        valid, n_late, max_ts = W.apply_watermark(
+            rows[:, 0], valid, wm, cfg.lateness)
     max_ts = jnp.maximum(state.max_ts, max_ts)
     if replay is None:
         exempt = jnp.zeros(dequeued.shape, bool)
@@ -231,18 +234,20 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
                        .astype(jnp.int32))
 
     # cross-batch continuity: prepend the carried W-S samples
-    seq = jnp.concatenate([state.carry, rows], axis=0)
-    seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
-    sig = seq[:, 1:]
-    agg, wcount = W.sliding_window(
-        sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
-        backend=cfg.backend, partial=False, interpret=cfg.interpret)
-    feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
-                                 partial=False)
+    with jax.named_scope("obs:window"):
+        seq = jnp.concatenate([state.carry, rows], axis=0)
+        seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
+        sig = seq[:, 1:]
+        agg, wcount = W.sliding_window(
+            sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
+            backend=cfg.backend, partial=False, interpret=cfg.interpret)
+        feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
+                                     partial=False)
 
-    emit = wcount >= cfg.min_count
-    _, cons = engine.evaluate(feats)
-    cons = jnp.where(emit, cons, R.C_NONE)
+    with jax.named_scope("obs:rules"):
+        emit = wcount >= cfg.min_count
+        _, cons = engine.evaluate(feats)
+        cons = jnp.where(emit, cons, R.C_NONE)
     record = jnp.concatenate([feats, agg], axis=1)         # [NW, 5 + D]
     return IngestResult(
         rb=rb,
@@ -300,7 +305,14 @@ class StreamExecutor:
         self._traces = 0
         self._budget = None            # dynamic core budget (traced operand)
         self.last_step_seconds = 0.0   # host wall time of the last step()
-        self._jstep = jax.jit(self._step, donate_argnums=(0,))
+        # observability: host span tracer (default disabled — near-zero
+        # cost) + on-device step-latency histogram.  The histogram is a
+        # fixed-shape donated operand fed the *previous* step's wall
+        # time, so percentile tracking adds zero recompiles.
+        self.tracer = NULL_TRACER
+        self._lat_hist = OL.histogram_init()
+        self._step_num = 0
+        self._jstep = jax.jit(self._step, donate_argnums=(0, 4))
 
     # -- state ------------------------------------------------------------
     def init_state(self, feature_dim: int) -> StreamState:
@@ -317,6 +329,19 @@ class StreamExecutor:
     def trace_count(self) -> int:
         """Number of step traces so far — 1 after warmup, forever."""
         return self._traces
+
+    def set_tracer(self, tracer) -> None:
+        """Install an ``obs.Tracer`` for host-span instrumentation of
+        ``step()`` (dispatch span + JAX profiler step annotation).
+        Tracing changes no traced shapes — zero recompiles."""
+        self.tracer = tracer
+
+    def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
+        """Step-latency percentiles from the on-device histogram (one
+        host transfer).  ``count`` is steps recorded so far — the first
+        step feeds the histogram on the *next* tick, so it trails
+        ``metrics.steps`` by one."""
+        return OL.histogram_percentiles(self._lat_hist, qs)
 
     @property
     def core_budget(self) -> int | None:
@@ -340,8 +365,9 @@ class StreamExecutor:
 
     # -- the single-trace step --------------------------------------------
     def _step(self, state: StreamState, items: jnp.ndarray,
-              ts: jnp.ndarray, budget: jnp.ndarray
-              ) -> tuple[StreamState, StepOutput]:
+              ts: jnp.ndarray, budget: jnp.ndarray,
+              lat_hist: jnp.ndarray, last_dt: jnp.ndarray
+              ) -> tuple[StreamState, StepOutput, jnp.ndarray]:
         # the Python body runs exactly once per jit trace, so this
         # counts (re)traces without reaching into jit internals
         self._traces += 1
@@ -349,23 +375,26 @@ class StreamExecutor:
 
         # non-emitted windows (count < min_count) enter the pipeline
         # dead: no rules, no escalation, no core-capacity consumption
-        result = self.pipeline.run(ing.record, live=ing.emit,
-                                   core_budget=budget)
+        with jax.named_scope("obs:pipeline"):
+            result = self.pipeline.run(ing.record, live=ing.emit,
+                                       core_budget=budget)
         escalated = result.escalated
         n_esc = jnp.sum(escalated.astype(jnp.int32))
         overflow = jnp.maximum(0, n_esc - budget)
 
-        metrics = advance_metrics(
-            state.metrics, ing, n_esc,
-            jnp.sum(result.stored.astype(jnp.int32)),
-            jnp.sum(result.dropped.astype(jnp.int32)), overflow)
+        with jax.named_scope("obs:metrics"):
+            metrics = advance_metrics(
+                state.metrics, ing, n_esc,
+                jnp.sum(result.stored.astype(jnp.int32)),
+                jnp.sum(result.dropped.astype(jnp.int32)), overflow)
+            lat_hist = OL.histogram_update(lat_hist, last_dt)
         new_state = StreamState(
             rb=ing.rb, carry=ing.carry, carry_valid=ing.carry_valid,
             max_ts=ing.max_ts, metrics=metrics,
         )
         return new_state, StepOutput(ing.aggregates, ing.features,
                                      ing.window_count, ing.consequence,
-                                     escalated, result.outputs)
+                                     escalated, result.outputs), lat_hist
 
     # -- public API ---------------------------------------------------------
     def step(self, state: StreamState, items: jnp.ndarray,
@@ -383,12 +412,20 @@ class StreamExecutor:
         ``last_step_seconds`` records the host wall time of the call —
         dispatch time unless the caller synchronizes, the full step if
         it does (the control plane feeds these into its straggler
-        detector; real deployments substitute per-device telemetry)."""
+        detector; real deployments substitute per-device telemetry).
+        The previous step's wall time also feeds the on-device latency
+        histogram (``latency_percentiles()``) as a traced operand."""
+        self._step_num += 1
         t0 = time.perf_counter()
-        out = self._jstep(state, items, ts,
-                          jnp.asarray(self._effective_budget(), jnp.int32))
+        with self.tracer.step_annotation("stream_step", self._step_num), \
+                self.tracer.span("stream.dispatch", step=self._step_num):
+            state, out, self._lat_hist = self._jstep(
+                state, items, ts,
+                jnp.asarray(self._effective_budget(), jnp.int32),
+                self._lat_hist,
+                jnp.asarray(self.last_step_seconds, jnp.float32))
         self.last_step_seconds = time.perf_counter() - t0
-        return out
+        return state, out
 
     def run(self, state: StreamState,
             producer: Iterable[tuple[jnp.ndarray, jnp.ndarray]],

@@ -53,6 +53,8 @@ from typing import NamedTuple
 import jax
 import numpy as np
 
+from repro.obs.events import EventLog
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.elastic import ElasticBudget
 from repro.runtime.straggler import StragglerDetector
 from repro.stream.fleet.executor import FleetExecutor, FleetState
@@ -96,10 +98,13 @@ class FleetController:
     wall_detector: StragglerDetector | None = None
     lag_detector: StragglerDetector | None = None
     lag_tolerance: float | None = None
+    event_log: EventLog | None = None
+    tracer: object = NULL_TRACER
     _prev_escalated: np.ndarray = None
     _prev_healthy: np.ndarray = None
     _resizes: int = 0
     _retraces: int = 0
+    _ticks: int = 0
 
     def __post_init__(self):
         cfg = self.executor.cfg
@@ -126,6 +131,15 @@ class FleetController:
         """Budget resizes actuated so far (for trace-bound asserts)."""
         return self._resizes
 
+    def _emit(self, kind: str, **kw) -> None:
+        """Record one control-plane decision in the event log (no-op
+        without one).  ``tick`` defaults to the controller's own tick
+        counter, so leave/join/remesh between ticks land causally
+        ordered next to the surrounding tick records."""
+        if self.event_log is not None:
+            kw.setdefault("tick", self._ticks)
+            self.event_log.emit(kind, **kw)
+
     # -- membership churn (leave/join within the mesh width) ---------------
     def _unavailable(self) -> set:
         """Ranks that cannot serve as a replay backup right now:
@@ -151,7 +165,13 @@ class FleetController:
         ex.set_active(active)
         plan = self.wall_detector.reassignment(
             sorted(self._unavailable() | {int(shard)}))
-        return plan.get(int(shard))
+        backup = plan.get(int(shard))
+        self._emit("leave", shard=int(shard), cause="member left fleet",
+                   active=[bool(x) for x in active])
+        self._emit("backup_assign", shard=int(shard),
+                   cause="reassignment over wall-time history",
+                   backup=None if backup is None else int(backup))
+        return backup
 
     def join(self, shard: int) -> None:
         """A device joined (or rejoined) at slot ``shard`` within the
@@ -174,6 +194,9 @@ class FleetController:
         healthy[shard] = False
         ex.set_health(healthy)
         self._prev_healthy[shard] = False    # re-admit only once caught up
+        self._emit("join", shard=int(shard),
+                   cause="replacement joined; excluded until caught up",
+                   active=[bool(x) for x in active])
 
     def remesh(self, state, devices: list, *, keep: list | None = None,
                num_core: int | None = None):
@@ -208,6 +231,12 @@ class FleetController:
         new_state, payload = ex.remesh(state, devices, keep=keep,
                                        num_core=num_core,
                                        fold_counters=fold)
+        self._emit("remesh", cause="device set changed",
+                   old_shards=old_e, new_shards=ex.cfg.num_shards,
+                   keep=[None if k is None else int(k) for k in keep],
+                   fold={str(s): int(b) for s, b in fold.items()},
+                   payload_rows={str(s): int(len(r))
+                                 for s, r in payload.items()})
 
         def _remap(arr, fill):
             return np.asarray([arr[k] if k is not None else fill
@@ -231,7 +260,17 @@ class FleetController:
     def tick(self, state: FleetState,
              step_times: np.ndarray | None = None) -> ControlDecision:
         """One control tick: observe ``state``, actuate health mask +
-        budget on the executor for the next data tick."""
+        budget on the executor for the next data tick.  With an
+        ``event_log`` installed, every actuation (health-mask change,
+        budget resize) lands as a typed JSONL record; with a ``tracer``
+        the whole tick is one host span."""
+        with self.tracer.span("control.tick", tick=self._ticks):
+            decision = self._tick(state, step_times)
+        self._ticks += 1
+        return decision
+
+    def _tick(self, state: FleetState,
+              step_times: np.ndarray | None = None) -> ControlDecision:
         ex = self.executor
         e = ex.cfg.num_shards
         # one host pull for everything the loop needs
@@ -265,9 +304,17 @@ class FleetController:
         lateness = ex.cfg.stream.lateness
         caught_up = (max_ts.max() - max_ts) <= lateness
         healthy &= self._prev_healthy | caught_up
+        prev_mask = ex.health
         self._prev_healthy = healthy
         ex.set_health(healthy)
         flagged = [int(r) for r in np.nonzero(~healthy)[0]]
+        if not np.array_equal(prev_mask, healthy):
+            newly = np.nonzero(prev_mask & ~healthy)[0]
+            self._emit(
+                "health_change",
+                cause="straggler flagged" if newly.size
+                else "re-admitted after catch-up",
+                healthy=[bool(x) for x in healthy], stragglers=flagged)
 
         # -- elastic budget ---------------------------------------------
         old_budget, old_slots = ex.core_budget, ex.core_slots
@@ -280,6 +327,13 @@ class FleetController:
         retraced = ex.core_slots != old_slots
         if retraced:
             self._retraces += 1
+        if resized:
+            self._emit(
+                "budget_resize",
+                cause="escalation pressure" if proposed > old_budget
+                else "idle shrink",
+                budget_from=int(old_budget), budget_to=int(proposed),
+                escalated=int(escalated.sum()), retraced=bool(retraced))
         return ControlDecision(
             budget=ex.core_budget, resized=resized, retraced=retraced,
             healthy=healthy, stragglers=flagged, escalated=escalated,
@@ -398,8 +452,10 @@ class FaultInjector:
     lost, which is exactly what the control plane exists to prevent.
     """
 
-    def __init__(self, schedule: FaultSchedule):
+    def __init__(self, schedule: FaultSchedule,
+                 event_log: EventLog | None = None):
         self.schedule = schedule
+        self.event_log = event_log
         self._backlog = collections.defaultdict(collections.deque)
         self._replay = collections.defaultdict(collections.deque)
         self.origin = None                  # [E] after the first inject
@@ -407,6 +463,10 @@ class FaultInjector:
             self._backlog[f.shard]          # materialize per-shard queues
         for c in schedule.churn:
             self._replay[c.shard]
+
+    def _emit(self, kind: str, tick: int | None, **kw) -> None:
+        if self.event_log is not None:
+            self.event_log.emit(kind, tick=tick, **kw)
 
     @property
     def pending(self) -> int:
@@ -429,6 +489,10 @@ class FaultInjector:
             mask = np.zeros((batch,), bool)
             items[:n], t[:n], mask[:n] = chunk[:, 1:], chunk[:, 0], True
             self._replay[stream].append((items, t, mask))
+        self._emit("requeue", None, shard=int(stream),
+                   cause="remesh payload re-queued for replay",
+                   rows=int(len(rows)),
+                   batches=len(range(0, len(rows), batch)))
 
     def inject(self, tick: int, items: np.ndarray, ts: np.ndarray,
                fresh: bool = True, backups: dict | None = None
@@ -461,6 +525,9 @@ class FaultInjector:
             if s in departed:
                 if fresh:
                     q.append((items[s].copy(), ts[s].copy(), full.copy()))
+                    self._emit("replay_queue", tick, shard=int(s),
+                               cause="stream departed; batch queued",
+                               depth=len(q))
                 offered[s] = False
                 items[s] = 0.0
                 origin[s] = -1
@@ -471,6 +538,9 @@ class FaultInjector:
                 items[s], ts[s], offered[s] = q.popleft()
                 origin[s] = s
                 claimed.add(s)
+                self._emit("slot_drain", tick, shard=int(s),
+                           cause="rejoined slot draining its replay queue",
+                           remaining=len(q))
 
         # 2. stall buffering: a stalled uplink delivers nothing
         for s, q in list(self._backlog.items()):
@@ -482,6 +552,9 @@ class FaultInjector:
                 items[s] = 0.0
                 origin[s] = -1
                 claimed.add(s)
+                self._emit("stall_buffer", tick, shard=int(s),
+                           cause="uplink stalled; batch buffered upstream",
+                           depth=len(q))
 
         # 3. backup replay: a departed stream's oldest batch re-runs on
         #    its backup's uplink (priority over the backup's own
@@ -501,6 +574,9 @@ class FaultInjector:
                 replay[b] = True
                 origin[b] = s
                 claimed.add(b)
+                self._emit("replay_delivery", tick, shard=int(b),
+                           cause="backup re-running departed stream's batch",
+                           stream=int(s), remaining=len(q))
 
         # 4. backlog drain: recovered shards catch up oldest-first
         for s, q in list(self._backlog.items()):
@@ -513,5 +589,8 @@ class FaultInjector:
             items[s], ts[s] = q.popleft()
             offered[s] = True
             origin[s] = s
+            self._emit("backlog_drain", tick, shard=int(s),
+                       cause="recovered shard draining its stall backlog",
+                       remaining=len(q))
         self.origin = origin
         return items, ts, offered, replay

@@ -63,6 +63,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.runtime import elastic
 
 from repro.core import rules as R
+from repro.obs import latency as OL
+from repro.obs.trace import NULL_TRACER
 from repro.core.pipeline import DataDrivenPipeline
 from repro.data import ringbuffer as rbuf
 from repro.stream.executor import (StepOutput, StreamConfig, StreamMetrics,
@@ -210,6 +212,13 @@ class FleetExecutor:
         self._healthy = np.ones(cfg.num_shards, bool)
         self._active = np.ones(cfg.num_shards, bool)
         self.last_step_seconds = 0.0
+        # observability: host span tracer (default disabled) + on-device
+        # step-latency histogram (fixed-shape donated operand fed the
+        # previous tick's wall time — zero recompiles, updated inside
+        # the same jit as the fleet step, outside the shard_map)
+        self.tracer = NULL_TRACER
+        self._lat_hist = OL.histogram_init()
+        self._step_num = 0
         # when True (default), step() blocks on the output so
         # last_step_seconds measures device execution — the control
         # plane's default wall-time straggler signal.  Deployments with
@@ -234,14 +243,19 @@ class FleetExecutor:
                             out_specs=(spec, spec))
 
         def _traced(state, items, ts, offered, replay, healthy, active,
-                    budget):
+                    budget, lat_hist, last_dt):
             # outer jit body runs once per trace (shard_map may re-trace
             # its inner fn during lowering; don't count those)
             self._traces += 1
-            return sharded(state, items, ts, offered, replay, healthy,
-                           active, budget)
+            out = sharded(state, items, ts, offered, replay, healthy,
+                          active, budget)
+            # step-latency histogram: replicated, updated outside the
+            # shard_map (one tick = one host-measured wall time)
+            with jax.named_scope("obs:latency"):
+                lat_hist = OL.histogram_update(lat_hist, last_dt)
+            return out, lat_hist
 
-        self._jstep = jax.jit(_traced, donate_argnums=(0,))
+        self._jstep = jax.jit(_traced, donate_argnums=(0, 8))
 
     # -- control-plane knobs (host-side, between ticks) --------------------
     @property
@@ -313,6 +327,20 @@ class FleetExecutor:
         """Device-set rebuilds so far — each costs one re-trace."""
         return self._remeshes
 
+    def set_tracer(self, tracer) -> None:
+        """Install an ``obs.Tracer``: host spans around dispatch and
+        device execution + a JAX profiler step annotation per tick.
+        Changes no traced shapes — zero recompiles."""
+        self.tracer = tracer
+
+    def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
+        """Fleet-tick latency percentiles from the on-device histogram
+        (one host transfer).  ``count`` trails ``metrics.steps`` by one
+        — a tick's wall time feeds the histogram on the next tick.  The
+        histogram survives :meth:`remesh` (it is per-executor, not
+        per-shard state)."""
+        return OL.histogram_percentiles(self._lat_hist, qs)
+
     # -- state ------------------------------------------------------------
     def init_state(self, feature_dim: int) -> FleetState:
         cfg, E = self.cfg.stream, self.cfg.num_shards
@@ -372,11 +400,12 @@ class FleetExecutor:
         # (watermarks are monotone; the control plane delays
         # re-admission until the shard's records would survive this
         # reference, so the clamp never converts into silent drops).
-        wm = jnp.maximum(
-            F.fleet_watermark(s.shard.max_ts, cfg.axis_name, healthy=h,
-                              active=a),
-            s.watermark)
-        eff_wm = jnp.where(h & a, wm, s.shard.max_ts)
+        with jax.named_scope("obs:fleet_watermark"):
+            wm = jnp.maximum(
+                F.fleet_watermark(s.shard.max_ts, cfg.axis_name, healthy=h,
+                                  active=a),
+                s.watermark)
+            eff_wm = jnp.where(h & a, wm, s.shard.max_ts)
         ing = ingest_and_window(cfg.stream, self.engine, s.shard,
                                 items[0], ts[0], watermark_ts=eff_wm,
                                 offer_mask=offered[0], excluded_ref=wm,
@@ -384,27 +413,31 @@ class FleetExecutor:
 
         # edge pipeline stages + rule gating, purely local; a departed
         # shard never escalates (membership masks the core exchange)
-        partial, core_live = self.pipeline.run_edge(ing.record,
-                                                    live=ing.emit)
-        core_live = core_live & a
+        with jax.named_scope("obs:edge_stages"):
+            partial, core_live = self.pipeline.run_edge(ing.record,
+                                                        live=ing.emit)
+            core_live = core_live & a
 
         # escalation: one all-to-all out, fleet-budgeted core stage,
         # one all-to-all back; the budget is a traced operand, its
         # static shape ceiling (self._slots) is baked into the trace
-        core_out, core_feats, processed, stats = F.federate_escalations(
-            partial.outputs, core_live, self.pipeline.run_core,
-            axis_name=cfg.axis_name, num_shards=cfg.num_shards,
-            num_core=cfg.num_core, core_budget=budget,
-            capacity=cfg.route_capacity, core_slots=self._slots)
-        result = self.pipeline.commit_core(partial, core_live, core_out,
-                                           core_feats, processed)
+        with jax.named_scope("obs:exchange_core"):
+            core_out, core_feats, processed, stats = F.federate_escalations(
+                partial.outputs, core_live, self.pipeline.run_core,
+                axis_name=cfg.axis_name, num_shards=cfg.num_shards,
+                num_core=cfg.num_core, core_budget=budget,
+                capacity=cfg.route_capacity, core_slots=self._slots)
+        with jax.named_scope("obs:core_commit"):
+            result = self.pipeline.commit_core(partial, core_live, core_out,
+                                               core_feats, processed)
 
         n_esc = jnp.sum(core_live.astype(jnp.int32))
         overflow = jnp.sum((core_live & ~processed).astype(jnp.int32))
-        metrics = advance_metrics(
-            s.shard.metrics, ing, n_esc,
-            jnp.sum(result.stored.astype(jnp.int32)),
-            jnp.sum(result.dropped.astype(jnp.int32)), overflow)
+        with jax.named_scope("obs:metrics"):
+            metrics = advance_metrics(
+                s.shard.metrics, ing, n_esc,
+                jnp.sum(result.stored.astype(jnp.int32)),
+                jnp.sum(result.dropped.astype(jnp.int32)), overflow)
         new_shard = StreamState(rb=ing.rb, carry=ing.carry,
                                 carry_valid=ing.carry_valid,
                                 max_ts=ing.max_ts, metrics=metrics)
@@ -483,14 +516,22 @@ class FleetExecutor:
                     f"{items.shape[1]} > micro_batch "
                     f"{self.cfg.stream.micro_batch} leaves replayed rows "
                     "queued past their lateness-exempt tick")
+        self._step_num += 1
         t0 = time.perf_counter()
-        out = self._jstep(state, items, ts, jnp.asarray(offered, bool),
-                          jnp.asarray(replay, bool),
-                          jnp.asarray(self._healthy),
-                          jnp.asarray(self._active),
-                          jnp.asarray(self._budget, jnp.int32))
-        if self.measure_steps:
-            jax.block_until_ready(out)
+        with self.tracer.step_annotation("fleet_tick", self._step_num):
+            with self.tracer.span("fleet.dispatch", step=self._step_num):
+                out, self._lat_hist = self._jstep(
+                    state, items, ts, jnp.asarray(offered, bool),
+                    jnp.asarray(replay, bool),
+                    jnp.asarray(self._healthy),
+                    jnp.asarray(self._active),
+                    jnp.asarray(self._budget, jnp.int32),
+                    self._lat_hist,
+                    jnp.asarray(self.last_step_seconds, jnp.float32))
+            if self.measure_steps:
+                with self.tracer.span("fleet.device_execute",
+                                      step=self._step_num):
+                    jax.block_until_ready(out)
         self.last_step_seconds = time.perf_counter() - t0
         return out
 
@@ -587,6 +628,11 @@ class FleetExecutor:
             [self._healthy[k] if k is not None else True for k in keep])
         self._active = np.asarray(
             [self._active[k] if k is not None else True for k in keep])
+        # the latency histogram survives the remesh, but its buffer is
+        # committed to the OLD device set — rehost it so the next step
+        # can place it on the new mesh
+        self._lat_hist = jnp.asarray(np.asarray(jax.device_get(
+            self._lat_hist)))
         self._remeshes += 1
         self._build()                          # one re-trace, next step
         spec = P(self.cfg.axis_name)

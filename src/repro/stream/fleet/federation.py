@@ -124,9 +124,10 @@ def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
 
     # bucket num_shards is the plan's shed row (non-escalated items);
     # it never rides the wire
-    send = RT.scatter_to_buckets(records, plan, num_shards + 1,
-                                 capacity)[:num_shards]
-    recv = RT.all_to_all_route(send, axis_name)            # [E, cap, R]
+    with jax.named_scope("obs:all_to_all_out"):
+        send = RT.scatter_to_buckets(records, plan, num_shards + 1,
+                                     capacity)[:num_shards]
+        recv = RT.all_to_all_route(send, axis_name)        # [E, cap, R]
 
     under, occupied, _ = RT.escalation_recv_slots(
         counts, ridx, num_core, capacity, core_budget)
@@ -134,17 +135,19 @@ def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
     # ascending global slot, so "first core_budget fleet-wide" is
     # exactly what survives, deterministically
     c_core = max(1, -(-core_slots // num_core))
-    full_out, full_feats, done_mask = RT.compact_apply(
-        run_core, recv.reshape(num_shards * capacity, r),
-        under.reshape(-1), c_core)
+    with jax.named_scope("obs:core_compute"):
+        full_out, full_feats, done_mask = RT.compact_apply(
+            run_core, recv.reshape(num_shards * capacity, r),
+            under.reshape(-1), c_core)
     f = full_feats.shape[1]
     done = done_mask.astype(records.dtype)
 
-    payload = jnp.concatenate(
-        [full_out, full_feats, done[:, None]],
-        axis=1).reshape(num_shards, capacity, r + f + 1)
-    back = RT.all_to_all_route(payload, axis_name)         # [E, cap, R+F+1]
-    resp = RT.gather_from_buckets(back, plan)              # [N, R+F+1]
+    with jax.named_scope("obs:all_to_all_back"):
+        payload = jnp.concatenate(
+            [full_out, full_feats, done[:, None]],
+            axis=1).reshape(num_shards, capacity, r + f + 1)
+        back = RT.all_to_all_route(payload, axis_name)     # [E, cap, R+F+1]
+        resp = RT.gather_from_buckets(back, plan)          # [N, R+F+1]
     core_out = resp[:, :r]
     core_feats = resp[:, r:r + f]
     processed = (resp[:, -1] > 0.5) & plan.keep
