@@ -23,6 +23,14 @@ an exact host-side recomputation, and ``trace_count <= 1 + retraces +
 remeshes`` (the leave/join itself stays on ONE trace — membership is
 an operand).
 
+``--regions`` runs the hierarchical-federation smoke: the same 8
+devices arranged as ``(R, E)`` region meshes for R in {1, 2, 4} under
+a fixed per-region fog budget, measuring step latency per shape and
+accounting the two-hop exchange volume.  Asserted: cross-region bytes
+derive from the fog *budget* and are independent of the region width E
+(the flat single-hop exchange grows with E), and every shape runs its
+whole measured window on ONE trace.
+
 The measurement runs in a subprocess: the forced host device count must
 be set before jax first initializes, and the parent harness has long
 since locked in its own platform.
@@ -38,12 +46,14 @@ WARMUP = 5
 SHARD_COUNTS = (1, 4, 8)
 
 
-def bench(faults: bool = False, churn: bool = False):
+def bench(faults: bool = False, churn: bool = False,
+          regions: bool = False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["JAX_PLATFORMS"] = "cpu"
     args = ["--child"] + (["--faults"] if faults else []) \
-        + (["--churn"] if churn else [])
+        + (["--churn"] if churn else []) \
+        + (["--regions"] if regions else [])
     out = subprocess.run([sys.executable, "-m", "benchmarks.fleet"] + args,
                          env=env, capture_output=True,
                          text=True, timeout=900)
@@ -431,13 +441,96 @@ def _child_churn():
     log.close()
 
 
+def _child_regions():
+    """Hierarchical-federation smoke: the same device budget arranged
+    as (R, E) region meshes, with the two-hop exchange volume accounted
+    against the flat single-hop baseline."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.obs import Tracer
+    from repro.stream.fleet import FleetConfig, FleetExecutor
+
+    S, steps = 8, 40
+    FOG = 8                             # fixed per-region fog budget
+    engine, scfg, make_pipeline = _hot_fixture()
+    rw = 5 + D                          # escalation record row width
+
+    # the O-claim is pure exchange geometry (no devices needed): at a
+    # fixed fog budget, widening a region leaves the cross-region hop
+    # untouched while the flat single-hop exchange keeps growing
+    def geom(r, eper):
+        return FleetConfig(stream=scfg, num_shards=r * eper,
+                           num_core=2, core_budget=2 * S,
+                           num_regions=r, fog_budget=FOG).exchange()
+
+    widths = (2, 4, 8, 16)
+    cross = [geom(2, e).cross_region_bytes(rw) for e in widths]
+    flat = [geom(2, e).flat_exchange_bytes(rw) for e in widths]
+    assert len(set(cross)) == 1, f"cross-region bytes grew with E: {cross}"
+    assert all(b > a for a, b in zip(flat, flat[1:])), flat
+    # ... and scales with the budget it is derived from
+    big = FleetConfig(stream=scfg, num_shards=8, num_core=2,
+                      core_budget=2 * S, num_regions=2,
+                      fog_budget=4 * FOG).exchange()
+    assert big.cross_region_bytes(rw) > cross[0]
+
+    for r in (1, 2, 4):
+        eper = S // r
+        cfg = FleetConfig(stream=scfg, num_shards=S,
+                          num_core=min(2, eper), core_budget=2 * S,
+                          num_regions=r, fog_budget=FOG)
+        ex = FleetExecutor(cfg, engine, make_pipeline())
+        ex.set_tracer(Tracer())        # trace bound holds with obs ON
+        state = ex.init_state(D)
+        rng = np.random.default_rng(7)
+        lat, t0 = [], 0.0
+        for i in range(WARMUP + steps):
+            base = rng.standard_normal((S, BATCH, D)).astype(np.float32)
+            if (i // 10) % 2:
+                base[:, :, 0] += 0.5   # alternating hot regime
+            ts = np.tile(t0 + np.arange(BATCH, dtype=np.float32), (S, 1))
+            t0 += BATCH
+            t = time.perf_counter()
+            state, out = ex.step(state, jnp.asarray(base),
+                                 jnp.asarray(ts))
+            jax.block_until_ready(out)
+            if i >= WARMUP:
+                lat.append(time.perf_counter() - t)
+        lat = np.asarray(lat)
+        m = state.metrics.as_dict()
+        assert ex.trace_count == 1, f"retraced: {ex.trace_count}"
+        exch = cfg.exchange()
+        xb, ib = exch.cross_region_bytes(rw), exch.intra_region_bytes(rw)
+        fb = exch.flat_exchange_bytes(rw)
+        assert xb <= fb, (xb, fb)
+        row(f"fleet/R{r}_step", float(np.median(lat) * 1e6),
+            f"items_per_s={S * BATCH / np.median(lat):.0f}")
+        row(f"fleet/R{r}_p99", float(np.percentile(lat, 99) * 1e6),
+            f"esc={m['fleet']['windows_escalated']}"
+            f";fog_shed={sum(m['fog_shed'])}"
+            f";core={sum(m['core_processed'])}"
+            f";traces={ex.trace_count}")
+        row(f"fleet/R{r}_exchange_bytes", float(xb),
+            f"intra_region={ib};flat_equiv={fb}"
+            f";cross_capacity={cfg.cross_capacity}"
+            f";fog_budget={FOG}")
+
+
 if __name__ == "__main__":
     if "--child" in sys.argv:
         if "--churn" in sys.argv:
             _child_churn()
         elif "--faults" in sys.argv:
             _child_faults()
+        elif "--regions" in sys.argv:
+            _child_regions()
         else:
             _child()
     else:
-        bench(faults="--faults" in sys.argv, churn="--churn" in sys.argv)
+        bench(faults="--faults" in sys.argv, churn="--churn" in sys.argv,
+              regions="--regions" in sys.argv)

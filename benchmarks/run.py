@@ -29,6 +29,8 @@ SUITES = {
         lambda: fleet.bench(faults=True),
     "fleet_churn":                     # leave -> backup replay -> join,
         lambda: fleet.bench(churn=True),   # then a true re-mesh
+    "fleet_regions":                   # (R, E) hierarchy, R in {1,2,4}
+        lambda: fleet.bench(regions=True),
 }
 
 

@@ -46,6 +46,7 @@ EVENT_KINDS = frozenset({
     "backlog_drain",     # a recovered shard drained one buffered batch
     "slot_drain",        # a rejoined slot drained its own replay queue
     "requeue",           # remesh payload pushed back as replay deliveries
+    "fog_budget_resize",  # a region's elastic fog budget changed
 })
 
 #: Envelope fields present on every record (payload keys ride alongside).

@@ -24,20 +24,53 @@ import numpy as np
 from repro.core.overlay import Overlay
 
 
-def remesh(old_shape: dict, new_devices: list, axis_names: tuple) -> "jax.sharding.Mesh":
+def remesh(old_shape: dict, new_devices: list, axis_names: tuple,
+           fixed_axis: str | None = None) -> "jax.sharding.Mesh":
     """Build the largest mesh of the same axis structure that fits the
     surviving device list.
 
-    Multi-axis meshes preserve the trailing (model) axis and let the
-    leading data axis absorb the change.  A single-axis mesh — e.g. the
-    stream fleet's ``("edge",)`` — has no model axis to preserve: the
-    only axis *is* the elastic one, and every surviving device lands on
-    it (the fleet shrink/grow path used by ``FleetExecutor.remesh``).
+    Which axis is *preserved* (keeps its old size) and which *absorbs*
+    the device-count change:
+
+    * ``fixed_axis=<name>`` (2-axis meshes) — the named axis keeps its
+      ``old_shape`` size and the other axis absorbs.  This is the
+      stream fleet's ``("region", "edge")`` contract: an edge resize
+      fixes ``"region"`` (regions persist, each gains/loses edge
+      devices), a region resize fixes ``"edge"`` (regions of unchanged
+      width appear/disappear) — one call resizes exactly one axis, and
+      the device count must be a multiple of the fixed axis's size.
+    * default, single axis — e.g. a flat ``("edge",)`` fleet — there is
+      nothing to preserve: the only axis *is* the elastic one, and
+      every surviving device lands on it.
+    * default, multi-axis — the training-mesh legacy: the trailing
+      (model) axis is preserved and the leading data axis absorbs; a
+      3-axis ``(pod, data, model)`` mesh additionally halves the pod
+      axis until it divides the remainder.
     """
     n = len(new_devices)
     if n < 1:
         raise ValueError("no devices to re-mesh over")
-    if len(axis_names) == 1:
+    if fixed_axis is not None:
+        if fixed_axis not in axis_names:
+            raise ValueError(f"fixed_axis {fixed_axis!r} not in "
+                             f"{axis_names}")
+        if len(axis_names) == 1:
+            raise ValueError(
+                f"fixed_axis {fixed_axis!r} on a single-axis mesh: the "
+                "only axis is the elastic one, nothing can be preserved")
+        if len(axis_names) != 2:
+            raise ValueError(
+                "fixed_axis supports 2-axis meshes (for >2 axes use the "
+                f"default trailing-axis contract), got {axis_names}")
+        keep = old_shape[fixed_axis]
+        other = n // keep
+        if other == 0 or other * keep != n:
+            raise ValueError(
+                f"{n} devices cannot keep {fixed_axis}={keep} "
+                f"(need a positive multiple of {keep})")
+        shape = (keep, other) if fixed_axis == axis_names[0] \
+            else (other, keep)
+    elif len(axis_names) == 1:
         shape = (n,)
     else:
         model = old_shape[axis_names[-1]]

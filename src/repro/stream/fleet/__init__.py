@@ -14,7 +14,17 @@ from repro.stream.fleet.executor import (  # noqa: F401
 )
 from repro.stream.fleet.federation import (  # noqa: F401
     FederationStats,
+    TieredStats,
     allreduce_metrics,
     federate_escalations,
+    federate_escalations_tiered,
     fleet_watermark,
+    layered_min_ref,
+    tiered_watermark,
+    tiered_watermark_ref,
+)
+from repro.stream.fleet.routing import (  # noqa: F401
+    TieredExchange,
+    fog_recv_occupancy,
+    region_survivor_counts,
 )

@@ -64,11 +64,13 @@ class ControlDecision(NamedTuple):
     """What one control tick observed and actuated."""
     budget: int                   # budget in force for the next tick
     resized: bool                 # did the budget change this tick
-    retraced: bool                # did the resize grow the slot ceiling
-    healthy: np.ndarray           # [E] bool mask installed for next tick
+    retraced: bool                # did a resize grow a slot ceiling
+    healthy: np.ndarray           # [S] bool mask installed for next tick
     stragglers: list              # ranks currently flagged (wall | lag)
-    escalated: np.ndarray         # [E] int, this tick's escalations
+    escalated: np.ndarray         # [S] int, this tick's escalations
     watermark: float              # fleet reference used by the last tick
+    region_budgets: np.ndarray | None = None  # [R] fog budgets in force
+    fog_resized: bool = False     # did any fog budget change this tick
 
 
 @dataclasses.dataclass
@@ -95,6 +97,7 @@ class FleetController:
     """
     executor: FleetExecutor
     budget_policy: ElasticBudget | None = None
+    region_policies: list | None = None
     wall_detector: StragglerDetector | None = None
     lag_detector: StragglerDetector | None = None
     lag_tolerance: float | None = None
@@ -106,12 +109,29 @@ class FleetController:
     _retraces: int = 0
     _ticks: int = 0
 
+    def _default_region_policies(self) -> list:
+        cfg = self.executor.cfg
+        return [ElasticBudget(min_budget=1,
+                              max_budget=max(1, 2 * cfg.fog_slots))
+                for _ in range(cfg.num_regions)]
+
     def __post_init__(self):
         cfg = self.executor.cfg
         e = cfg.num_shards
         if self.budget_policy is None:
             self.budget_policy = ElasticBudget(
                 min_budget=1, max_budget=max(1, 2 * cfg.core_slots))
+        # per-region fog budgets are elastic only when fog budgeting is
+        # opted into (cfg.fog_budget set, or explicit policies): a
+        # config without a fog budget keeps the non-binding default —
+        # elastically shrinking it would change flat-fleet semantics
+        if self.region_policies is None and cfg.fog_budget is not None:
+            self.region_policies = self._default_region_policies()
+        if self.region_policies is not None \
+                and len(self.region_policies) != cfg.num_regions:
+            raise ValueError(
+                f"need one region policy per region "
+                f"({cfg.num_regions}), got {len(self.region_policies)}")
         if self.lag_tolerance is None:
             self.lag_tolerance = 2.0 * cfg.stream.micro_batch
         if self.wall_detector is None:
@@ -155,21 +175,39 @@ class FleetController:
         pick the backup rank that should re-run its buffered
         micro-batches (``StragglerDetector.reassignment`` over the
         wall-time history: the least-loaded healthy, present rank).
-        Returns the backup rank, or ``None`` when no healthy rank is
-        left to replay on (the records then wait for a joiner)."""
+
+        **Backup locality**: the pick prefers a rank in the leaver's
+        own *region* — replay traffic then rides the leaver's uplink to
+        an intra-region peer and its escalations stay under the same
+        fog budget, instead of shipping a whole stream across the
+        region axis.  Only when no in-region rank is available does the
+        pick fall back to the fleet-wide least-loaded rank.  Returns
+        the backup rank, or ``None`` when no healthy rank is left
+        anywhere (the records then wait for a joiner)."""
         ex = self.executor
         active = ex.active
         if not active[shard]:
             raise ValueError(f"shard {shard} already left")
         active[shard] = False
         ex.set_active(active)
+        eper = ex.cfg.edges_per_region
+        region = int(shard) // eper
+        outside = {i for i in range(ex.cfg.num_shards)
+                   if i // eper != region}
         plan = self.wall_detector.reassignment(
-            sorted(self._unavailable() | {int(shard)}))
+            sorted(self._unavailable() | {int(shard)} | outside))
         backup = plan.get(int(shard))
+        locality = "intra-region"
+        if backup is None:
+            plan = self.wall_detector.reassignment(
+                sorted(self._unavailable() | {int(shard)}))
+            backup = plan.get(int(shard))
+            locality = "cross-region fallback"
         self._emit("leave", shard=int(shard), cause="member left fleet",
                    active=[bool(x) for x in active])
         self._emit("backup_assign", shard=int(shard),
-                   cause="reassignment over wall-time history",
+                   cause=f"reassignment over wall-time history "
+                         f"({locality})",
                    backup=None if backup is None else int(backup))
         return backup
 
@@ -199,7 +237,8 @@ class FleetController:
                    active=[bool(x) for x in active])
 
     def remesh(self, state, devices: list, *, keep: list | None = None,
-               num_core: int | None = None):
+               num_core: int | None = None,
+               num_regions: int | None = None):
         """The device set actually changed: rebuild the mesh over the
         survivors (one re-trace) and migrate the state — see
         :meth:`FleetExecutor.remesh`.  Departed shards' counters fold
@@ -230,9 +269,11 @@ class FleetController:
                 fold[s] = kept[0]
         new_state, payload = ex.remesh(state, devices, keep=keep,
                                        num_core=num_core,
+                                       num_regions=num_regions,
                                        fold_counters=fold)
         self._emit("remesh", cause="device set changed",
                    old_shards=old_e, new_shards=ex.cfg.num_shards,
+                   num_regions=ex.cfg.num_regions,
                    keep=[None if k is None else int(k) for k in keep],
                    fold={str(s): int(b) for s, b in fold.items()},
                    payload_rows={str(s): int(len(r))
@@ -250,6 +291,11 @@ class FleetController:
             self._prev_escalated[dst] += self._prev_escalated[src]
         self._prev_escalated = _remap(self._prev_escalated, 0)
         self._prev_healthy = _remap(self._prev_healthy, True)
+        # regions are re-formed by the renumbering: per-region fog
+        # policies restart (their hysteresis history is per region
+        # identity, which the remesh does not preserve)
+        if self.region_policies is not None:
+            self.region_policies = self._default_region_policies()
         for name in ("wall_detector", "lag_detector"):
             d = getattr(self, name)
             setattr(self, name, StragglerDetector(
@@ -334,10 +380,44 @@ class FleetController:
                 else "idle shrink",
                 budget_from=int(old_budget), budget_to=int(proposed),
                 escalated=int(escalated.sum()), retraced=bool(retraced))
+
+        # -- elastic per-region fog budgets ----------------------------
+        # one ElasticBudget instance per region, fed the region's own
+        # candidate demand; only active when fog budgeting is opted in
+        fog_resized = False
+        region_budgets = None
+        if self.region_policies is not None:
+            rr = ex.cfg.num_regions
+            demand = escalated.reshape(rr, ex.cfg.edges_per_region).sum(1)
+            old_rb = ex.region_budget
+            old_fog_slots = ex.fog_slots
+            new_rb = np.asarray(
+                [self.region_policies[i].propose(int(demand[i]),
+                                                 int(old_rb[i]))
+                 for i in range(rr)], np.int32)
+            if not np.array_equal(new_rb, old_rb):
+                ex.set_region_budget(new_rb)
+                fog_resized = True
+                self._resizes += 1
+                fog_retraced = ex.fog_slots != old_fog_slots
+                if fog_retraced:
+                    self._retraces += 1
+                    retraced = True
+                for i in np.nonzero(new_rb != old_rb)[0]:
+                    self._emit(
+                        "fog_budget_resize", shard=None,
+                        cause="region escalation pressure"
+                        if new_rb[i] > old_rb[i] else "region idle shrink",
+                        region=int(i), budget_from=int(old_rb[i]),
+                        budget_to=int(new_rb[i]),
+                        escalated=int(demand[i]),
+                        retraced=bool(fog_retraced))
+            region_budgets = ex.region_budget
         return ControlDecision(
             budget=ex.core_budget, resized=resized, retraced=retraced,
             healthy=healthy, stragglers=flagged, escalated=escalated,
-            watermark=float(np.asarray(wm).reshape(-1)[0]))
+            watermark=float(np.asarray(wm).reshape(-1)[0]),
+            region_budgets=region_budgets, fog_resized=fog_resized)
 
     @property
     def max_trace_count(self) -> int:

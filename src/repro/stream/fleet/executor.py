@@ -1,28 +1,39 @@
-"""Sharded edge-fleet stream runtime: E edge devices, one mesh, one
-traced step.
+"""Sharded edge-fleet stream runtime: a 2-D ``(region, edge)`` mesh,
+one traced step.
 
-``FleetExecutor`` runs E independent edge shards — each with its own
-ring buffer, window carry, and watermark — as **one** ``shard_map``
-step over an ``"edge"`` mesh axis:
+``FleetExecutor`` runs S = R x E independent edge shards — each with
+its own ring buffer, window carry, and watermark — as **one**
+``shard_map`` step over a ``("region", "edge")`` mesh (``num_regions=1``
+is the flat fleet, bit for bit):
 
     per-shard:  enqueue -> dequeue -> watermark -> windows -> rules
                 -> edge pipeline stages            (no cross-talk)
-    fleet:      escalated window records -> ONE all-to-all -> core
-                sub-mesh (ranks 0..num_core-1) -> fleet-budgeted core
-                stage -> all-to-all scatter-back -> commit
+    region:     escalation candidates pre-aggregate on the inner
+                ``edge`` axis — one intra-region all-to-all to the
+                region's fog columns under a per-region ``fog_budget``
+                (shed candidates keep their edge results)
+    fleet:      only region survivors cross the ``region`` axis (one
+                budget-sized all-to-all) to the core sub-mesh in
+                region 0 -> fleet-budgeted core stage -> the same two
+                hops back -> commit
 
 The whole tick compiles to a single XLA executable (``trace_count``
 stays 1 after warmup, same discipline as ``StreamExecutor``): per-shard
 work is the *same code* as the single-device executor
-(``ingest_and_window``), so a fleet of E shards is bit-identical to E
+(``ingest_and_window``), so a fleet of S shards is bit-identical to S
 lone devices except where the fleet semantics intentionally differ —
 
 * the watermark reference is the fleet-wide **min** of per-shard max
   event times (a lagging shard holds back lateness-dropping on every
-  shard), and
+  shard), layered per region then across regions
+  (``federation.tiered_watermark``),
 * core capacity is a **fleet-level budget**: the first ``core_budget``
-  escalated windows per step (deterministic shard-major order) get core
-  compute wherever they came from; the rest keep their edge results.
+  escalated windows per step (deterministic region-major global-slot
+  order) get core compute wherever they came from; the rest keep their
+  edge results, and
+* each region additionally caps what it forwards at its own
+  ``fog_budget`` — cross-region traffic is O(fog budget), not O(E),
+  which is what lets fleet width scale (see ``stream/fleet/routing``).
 
 Fleet **churn** (devices leave and join) is handled at two granularities:
 
@@ -36,7 +47,8 @@ Fleet **churn** (devices leave and join) is handled at two granularities:
   core rank leaving is a device-set change, i.e. a :meth:`remesh`.
 * **re-mesh** — when the device set actually changes,
   :meth:`FleetExecutor.remesh` rebuilds the mesh over the survivors
-  (``runtime.elastic.remesh`` on the single ``("edge",)`` axis),
+  (``runtime.elastic.remesh`` on the ``("region", "edge")`` axes,
+  resizing one axis per call),
   re-shards the state with ``runtime.elastic.reshard_state``
   (surviving rows migrate; a departed shard's unconsumed ring rows
   come back to the host as the backup-replay payload and its counters
@@ -71,34 +83,71 @@ from repro.stream.executor import (StepOutput, StreamConfig, StreamMetrics,
                                    StreamState, _zero_metrics,
                                    advance_metrics, ingest_and_window)
 from repro.stream.fleet import federation as F
+from repro.stream.fleet import routing as FR
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetConfig:
     """Fleet topology + budget knobs.  Topology fields are static (part
-    of the single trace, like ``StreamConfig``); ``core_budget`` is
-    only the *initial* value of the dynamic budget — the control plane
-    resizes it between ticks without recompiling, up to the static
-    shape ceiling ``core_budget_max`` (defaults to ``core_budget``;
-    growing past it costs exactly one re-trace)."""
+    of the single trace, like ``StreamConfig``); ``core_budget`` and
+    ``fog_budget`` are only the *initial* values of the dynamic budgets
+    — the control plane resizes them between ticks without recompiling,
+    up to the static shape ceilings (``core_budget_max`` /
+    ``fog_budget_max``; growing past one costs exactly one re-trace).
+
+    The fleet is a 2-D ``(region, edge)`` mesh: ``num_shards`` total
+    edge devices in ``num_regions`` equal regions (region-major flat
+    numbering: shard ``s`` = region ``s // edges_per_region``, edge
+    column ``s % edges_per_region``).  ``num_regions=1`` (the default)
+    is the flat fleet — same semantics, bit for bit.  The core
+    sub-mesh lives in region 0 at edge columns ``0..num_core-1``
+    (flat shards ``0..num_core-1``, exactly as before); every region's
+    matching columns double as its *fog* tier, pre-aggregating the
+    region's escalations under a per-region ``fog_budget`` before
+    anything crosses the region axis."""
     stream: StreamConfig           # per-shard stream config
-    num_shards: int                # E devices on the "edge" mesh axis
-    num_core: int = 1              # core sub-mesh = ranks 0..num_core-1
+    num_shards: int                # total edge devices (all regions)
+    num_core: int = 1              # core sub-mesh = region-0 cols 0..K-1
     core_budget: int = 8           # initial fleet-level escalations / step
     core_budget_max: int | None = None   # static slot ceiling (shape)
     axis_name: str = "edge"
+    num_regions: int = 1           # R regions on the outer mesh axis
+    fog_budget: int | None = None  # initial per-region escalation budget
+    #                                (None = non-binding: a region may
+    #                                escalate everything, the flat
+    #                                semantics)
+    fog_budget_max: int | None = None    # static per-region ceiling
+    region_axis: str = "region"
 
     def __post_init__(self):
         if self.num_shards < 1:
             raise ValueError(f"need >= 1 shard, got {self.num_shards}")
-        if not (1 <= self.num_core <= self.num_shards):
-            raise ValueError("need 1 <= num_core <= num_shards, got "
-                             f"{self.num_core} / {self.num_shards}")
+        if self.num_regions < 1 or self.num_shards % self.num_regions:
+            raise ValueError(
+                f"num_shards ({self.num_shards}) must split into "
+                f"num_regions ({self.num_regions}) equal regions")
+        if not (1 <= self.num_core <= self.edges_per_region):
+            raise ValueError(
+                "need 1 <= num_core <= edges_per_region (the core "
+                "sub-mesh is region 0's leading edge columns), got "
+                f"{self.num_core} / {self.edges_per_region}")
         if self.core_budget < 0:
             raise ValueError(f"core_budget must be >= 0, got {self}")
         if self.core_budget_max is not None \
                 and self.core_budget_max < self.core_budget:
             raise ValueError(f"core_budget_max < core_budget: {self}")
+        if self.fog_budget is not None and self.fog_budget < 0:
+            raise ValueError(f"fog_budget must be >= 0, got {self}")
+        if self.fog_budget_max is not None and self.fog_budget is not None \
+                and self.fog_budget_max < self.fog_budget:
+            raise ValueError(f"fog_budget_max < fog_budget: {self}")
+        if self.axis_name == self.region_axis:
+            raise ValueError(f"mesh axes must be distinct, got {self}")
+
+    @property
+    def edges_per_region(self) -> int:
+        """Edge devices per region (the inner mesh axis width)."""
+        return self.num_shards // self.num_regions
 
     @property
     def core_slots(self) -> int:
@@ -107,26 +156,68 @@ class FleetConfig:
             else self.core_budget_max
 
     @property
+    def fog_slots(self) -> int:
+        """Static shape ceiling of the per-region fog budget.  With no
+        fog budget configured it is the region's worst-case demand
+        (every window of every edge escalating) — non-binding, so the
+        region tier degenerates to the flat fleet exactly."""
+        if self.fog_budget_max is not None:
+            return self.fog_budget_max
+        if self.fog_budget is not None:
+            return self.fog_budget
+        return self.edges_per_region * self.stream.windows_per_step
+
+    @property
+    def initial_fog_budget(self) -> int:
+        """Per-region budget in force before any control-plane resize."""
+        return self.fog_slots if self.fog_budget is None \
+            else self.fog_budget
+
+    @property
     def route_capacity(self) -> int:
-        """Per-(src, dest) slot count of the all-to-all buffer.  Global
-        slots fan out round-robin over the core sub-mesh, so one shard
-        never sends more than ceil(NW / num_core) records to one core
-        rank — no send-side shed, ever."""
+        """Per-(src, dest) slot count of the intra-region (hop 1)
+        all-to-all buffer.  Global slots fan out round-robin over the
+        fog columns, so one shard never sends more than
+        ceil(NW / num_core) records to one column — no send-side shed,
+        ever."""
         return -(-self.stream.windows_per_step // self.num_core)
+
+    @property
+    def cross_capacity(self) -> int:
+        """Per-(region, region) slot count of the cross-region (hop 2)
+        all-to-all buffer: ``ceil(fog_slots / num_core)``.  Derived
+        from the fog-budget ceiling, NOT from the region width — the
+        reason cross-region traffic stops scaling with fleet width."""
+        return max(1, -(-self.fog_slots // self.num_core))
+
+    def exchange(self) -> FR.TieredExchange:
+        """Static geometry of the two-hop exchange (byte accounting
+        for the region bench)."""
+        return FR.TieredExchange(
+            num_regions=self.num_regions,
+            edges_per_region=self.edges_per_region,
+            num_core=self.num_core, edge_capacity=self.route_capacity,
+            cross_capacity=self.cross_capacity)
 
 
 class FleetMetrics(NamedTuple):
     """Per-shard stream counters + all-reduced fleet counters +
     escalation-exchange counters.  In the global (host) view, ``shard``
-    leaves are [E] arrays; ``fleet`` leaves are [E] replicated."""
+    leaves are [S] arrays (S = total shards, region-major); ``fleet``
+    leaves are [S] replicated; ``region_watermark`` is replicated
+    *within* each region (row ``s`` holds region ``s //
+    edges_per_region``'s value)."""
     shard: StreamMetrics            # this shard's local counters
-    fleet: StreamMetrics            # psum over the edge axis
-    escalations_sent: jnp.ndarray   # records this shard routed out
+    fleet: StreamMetrics            # psum over both mesh axes
+    escalations_sent: jnp.ndarray   # this shard's fog-budget survivors
+    fog_shed: jnp.ndarray           # this shard's candidates shed by the
+    #                                 region (fog) budget
     core_received: jnp.ndarray      # records landed here as core rank
     core_processed: jnp.ndarray     # of those, got core compute
-    fleet_core_overflow: jnp.ndarray  # fleet windows beyond budget
+    fleet_core_overflow: jnp.ndarray  # fleet survivors beyond budget
     late_excluded: jnp.ndarray      # records admitted past the fleet wm
     watermark: jnp.ndarray          # fleet watermark used last tick (f32)
+    region_watermark: jnp.ndarray   # this shard's region's watermark (f32)
 
     def as_dict(self) -> dict:
         """Host-side snapshot: a single ``jax.device_get`` for the
@@ -146,32 +237,40 @@ class FleetMetrics(NamedTuple):
             "fleet": {k: _fleet(v) for k, v in
                       zip(StreamMetrics._fields, host.fleet)},
             "escalations_sent": _shard(host.escalations_sent),
+            "fog_shed": _shard(host.fog_shed),
             "core_received": _shard(host.core_received),
             "core_processed": _shard(host.core_processed),
             "fleet_core_overflow": _fleet(host.fleet_core_overflow),
             "late_excluded": _shard(host.late_excluded),
             "watermark": float(np.asarray(host.watermark).reshape(-1)[0]),
+            "region_watermark": [
+                float(x) for x in
+                np.asarray(host.region_watermark).reshape(-1)],
         }
 
 
 class FleetState(NamedTuple):
-    """Global fleet state: every leaf carries a leading [E] shard axis
-    (sharded over the mesh; ``shard_map`` hands each device its row)."""
+    """Global fleet state: every leaf carries a leading [S] shard axis
+    (region-major flat numbering, sharded over both mesh axes;
+    ``shard_map`` hands each device its row)."""
     shard: StreamState              # per-shard rb/carry/watermark/metrics
     fleet: StreamMetrics            # all-reduced counters (replicated)
     escalations_sent: jnp.ndarray
+    fog_shed: jnp.ndarray           # per-shard fog-budget shed counter
     core_received: jnp.ndarray
     core_processed: jnp.ndarray
     fleet_core_overflow: jnp.ndarray
     late_excluded: jnp.ndarray      # per-shard catch-up record counter
-    watermark: jnp.ndarray          # [E] f32, fleet reference (replicated)
+    watermark: jnp.ndarray          # [S] f32, fleet reference (replicated)
+    region_watermark: jnp.ndarray   # [S] f32, replicated within region
 
     @property
     def metrics(self) -> FleetMetrics:
         return FleetMetrics(self.shard.metrics, self.fleet,
-                            self.escalations_sent, self.core_received,
-                            self.core_processed, self.fleet_core_overflow,
-                            self.late_excluded, self.watermark)
+                            self.escalations_sent, self.fog_shed,
+                            self.core_received, self.core_processed,
+                            self.fleet_core_overflow, self.late_excluded,
+                            self.watermark, self.region_watermark)
 
 
 class FleetExecutor:
@@ -198,17 +297,27 @@ class FleetExecutor:
             devs = jax.devices()
             if len(devs) < cfg.num_shards:
                 raise ValueError(f"need {cfg.num_shards} devices for the "
-                                 f"edge axis, have {len(devs)}")
-            mesh = Mesh(np.asarray(devs[:cfg.num_shards]), (cfg.axis_name,))
-        if mesh.shape[cfg.axis_name] != cfg.num_shards:
-            raise ValueError(f"mesh axis {cfg.axis_name!r} has "
-                             f"{mesh.shape[cfg.axis_name]} devices, config "
-                             f"says {cfg.num_shards}")
+                                 f"fleet mesh, have {len(devs)}")
+            mesh = Mesh(
+                np.asarray(devs[:cfg.num_shards]).reshape(
+                    cfg.num_regions, cfg.edges_per_region),
+                (cfg.region_axis, cfg.axis_name))
+        if mesh.shape.get(cfg.region_axis) != cfg.num_regions \
+                or mesh.shape.get(cfg.axis_name) != cfg.edges_per_region:
+            raise ValueError(
+                f"mesh shape {dict(mesh.shape)} does not match config "
+                f"({cfg.region_axis}={cfg.num_regions}, "
+                f"{cfg.axis_name}={cfg.edges_per_region})")
         self.mesh = mesh
         self._traces = 0
         self._remeshes = 0
         self._budget = cfg.core_budget       # dynamic, a traced operand
         self._slots = cfg.core_slots         # static shape ceiling
+        # per-region fog budgets: dynamic [R] traced operand + one
+        # static per-region slot ceiling (shape)
+        self._region_budget = np.full(cfg.num_regions,
+                                      cfg.initial_fog_budget, np.int32)
+        self._fog_slots = cfg.fog_slots
         self._healthy = np.ones(cfg.num_shards, bool)
         self._active = np.ones(cfg.num_shards, bool)
         self.last_step_seconds = 0.0
@@ -231,31 +340,35 @@ class FleetExecutor:
 
     def _build(self) -> None:
         """(Re)build the jitted fleet step for the current static slot
-        ceiling, mesh, and shard count.  Called once at init and again
-        only when the control plane grows the budget past
-        ``self._slots`` or :meth:`remesh` changes the device set — each
-        rebuild costs exactly one re-trace on the next step."""
+        ceilings, mesh, and shard count.  Called once at init and again
+        only when the control plane grows a budget past its ceiling
+        (``self._slots`` / ``self._fog_slots``) or :meth:`remesh`
+        changes the device set — each rebuild costs exactly one
+        re-trace on the next step."""
         cfg = self.cfg
-        spec = P(cfg.axis_name)
+        # [S]-leading leaves shard over both mesh axes (region-major);
+        # the per-region fog budgets [R] shard over the region axis only
+        spec = P((cfg.region_axis, cfg.axis_name))
+        rspec = P(cfg.region_axis)
         sharded = shard_map(self._fleet_step, mesh=self.mesh,
                             in_specs=(spec, spec, spec, spec, spec, spec,
-                                      spec, P()),
+                                      spec, P(), rspec),
                             out_specs=(spec, spec))
 
         def _traced(state, items, ts, offered, replay, healthy, active,
-                    budget, lat_hist, last_dt):
+                    budget, region_budget, lat_hist, last_dt):
             # outer jit body runs once per trace (shard_map may re-trace
             # its inner fn during lowering; don't count those)
             self._traces += 1
             out = sharded(state, items, ts, offered, replay, healthy,
-                          active, budget)
+                          active, budget, region_budget)
             # step-latency histogram: replicated, updated outside the
             # shard_map (one tick = one host-measured wall time)
             with jax.named_scope("obs:latency"):
                 lat_hist = OL.histogram_update(lat_hist, last_dt)
             return out, lat_hist
 
-        self._jstep = jax.jit(_traced, donate_argnums=(0, 8))
+        self._jstep = jax.jit(_traced, donate_argnums=(0, 9))
 
     # -- control-plane knobs (host-side, between ticks) --------------------
     @property
@@ -281,6 +394,35 @@ class FleetExecutor:
             self._slots = budget
             self._build()
         self._budget = budget
+
+    @property
+    def region_budget(self) -> np.ndarray:
+        """Current dynamic per-region fog budgets ([R] ints)."""
+        return self._region_budget.copy()
+
+    @property
+    def fog_slots(self) -> int:
+        """Current static per-region fog slot ceiling (shape)."""
+        return self._fog_slots
+
+    def set_region_budget(self, budgets) -> None:
+        """Resize the per-region fog budgets between ticks.  A scalar
+        applies to every region; an [R] array sets them individually.
+        Values within the current fog slot ceiling change only a traced
+        operand (zero recompiles); growing the *maximum* past the
+        ceiling rebuilds the step for the larger hop-2 buffer — at most
+        one re-trace per resize, same discipline as
+        :meth:`set_core_budget`."""
+        budgets = np.broadcast_to(
+            np.asarray(budgets, np.int32),
+            (self.cfg.num_regions,)).copy()
+        if (budgets < 0).any():
+            raise ValueError(f"fog budgets must be >= 0, got {budgets}")
+        top = int(budgets.max())
+        if top > self._fog_slots:
+            self._fog_slots = top
+            self._build()
+        self._region_budget = budgets
 
     def set_health(self, healthy: np.ndarray) -> None:
         """Install the per-shard health mask used by the *next* tick's
@@ -363,11 +505,13 @@ class FleetExecutor:
         return FleetState(
             shard=jax.tree.map(tile, shard),
             fleet=StreamMetrics(*(zero() for _ in StreamMetrics._fields)),
-            escalations_sent=zero(), core_received=zero(),
+            escalations_sent=zero(), fog_shed=zero(), core_received=zero(),
             core_processed=zero(), fleet_core_overflow=zero(),
             late_excluded=zero(),
             watermark=jnp.full((E,), jnp.finfo(jnp.float32).min,
                                jnp.float32),
+            region_watermark=jnp.full((E,), jnp.finfo(jnp.float32).min,
+                                      jnp.float32),
         )
 
     @property
@@ -379,32 +523,42 @@ class FleetExecutor:
     def _fleet_step(self, state: FleetState, items: jnp.ndarray,
                     ts: jnp.ndarray, offered: jnp.ndarray,
                     replay: jnp.ndarray, healthy: jnp.ndarray,
-                    active: jnp.ndarray, budget: jnp.ndarray
+                    active: jnp.ndarray, budget: jnp.ndarray,
+                    region_budget: jnp.ndarray
                     ) -> tuple[FleetState, StepOutput]:
         cfg = self.cfg
         s = jax.tree.map(lambda x: x[0], state)        # this shard's block
         h = healthy[0]                                 # this shard's flag
         a = active[0]                                  # membership flag
         r = replay[0]                                  # backup-replay tick
+        rb = region_budget[0]                          # this region's fog
+        #                                                budget
 
         # fleet watermark: min of per-shard maxima (as of the previous
         # step) over *healthy, active* shards — a lagging-but-healthy
         # shard holds back lateness fleet-wide; a flagged straggler or
-        # a departed shard doesn't.  An excluded-but-present shard
-        # falls back to its own running max (exact single-device
-        # semantics): it keeps processing its backlog — the catch-up
-        # path — and every record it admits past the fleet reference is
-        # counted in late_excluded, never silently lost.  Clamped
-        # against the previous reference: re-admitting a shard that
-        # still trails must not roll the published watermark back
-        # (watermarks are monotone; the control plane delays
-        # re-admission until the shard's records would survive this
-        # reference, so the clamp never converts into silent drops).
+        # a departed shard doesn't.  Tiered: the layered
+        # healthy&active -> active -> plain fallback runs per region
+        # over the edge axis (the fog tier's close reference, kept in
+        # region_watermark), then again over the region axis for the
+        # fleet reference — with one region or a fully healthy fleet
+        # this equals the flat fleet's min exactly.  An
+        # excluded-but-present shard falls back to its own running max
+        # (exact single-device semantics): it keeps processing its
+        # backlog — the catch-up path — and every record it admits past
+        # the fleet reference is counted in late_excluded, never
+        # silently lost.  Clamped against the previous reference:
+        # re-admitting a shard that still trails must not roll the
+        # published watermark back (watermarks are monotone; the
+        # control plane delays re-admission until the shard's records
+        # would survive this reference, so the clamp never converts
+        # into silent drops).
         with jax.named_scope("obs:fleet_watermark"):
-            wm = jnp.maximum(
-                F.fleet_watermark(s.shard.max_ts, cfg.axis_name, healthy=h,
-                                  active=a),
-                s.watermark)
+            wm_raw, rwm_raw = F.tiered_watermark(
+                s.shard.max_ts, cfg.region_axis, cfg.axis_name, healthy=h,
+                active=a)
+            wm = jnp.maximum(wm_raw, s.watermark)
+            rwm = jnp.maximum(rwm_raw, s.region_watermark)
             eff_wm = jnp.where(h & a, wm, s.shard.max_ts)
         ing = ingest_and_window(cfg.stream, self.engine, s.shard,
                                 items[0], ts[0], watermark_ts=eff_wm,
@@ -418,15 +572,24 @@ class FleetExecutor:
                                                         live=ing.emit)
             core_live = core_live & a
 
-        # escalation: one all-to-all out, fleet-budgeted core stage,
-        # one all-to-all back; the budget is a traced operand, its
-        # static shape ceiling (self._slots) is baked into the trace
+        # escalation: the two-hop tiered exchange — intra-region
+        # all-to-all to the fog columns under the per-region fog
+        # budget, then only region survivors cross the region axis to
+        # the core sub-mesh.  Both budgets are traced operands; their
+        # static shape ceilings (self._slots / self._fog_slots) are
+        # baked into the trace
         with jax.named_scope("obs:exchange_core"):
-            core_out, core_feats, processed, stats = F.federate_escalations(
-                partial.outputs, core_live, self.pipeline.run_core,
-                axis_name=cfg.axis_name, num_shards=cfg.num_shards,
-                num_core=cfg.num_core, core_budget=budget,
-                capacity=cfg.route_capacity, core_slots=self._slots)
+            core_out, core_feats, processed, stats = \
+                F.federate_escalations_tiered(
+                    partial.outputs, core_live, self.pipeline.run_core,
+                    region_axis=cfg.region_axis, edge_axis=cfg.axis_name,
+                    num_regions=cfg.num_regions,
+                    edges_per_region=cfg.edges_per_region,
+                    num_core=cfg.num_core, region_budget=rb,
+                    core_budget=budget, edge_capacity=cfg.route_capacity,
+                    cross_capacity=max(
+                        1, -(-self._fog_slots // cfg.num_core)),
+                    core_slots=self._slots)
         with jax.named_scope("obs:core_commit"):
             result = self.pipeline.commit_core(partial, core_live, core_out,
                                                core_feats, processed)
@@ -447,14 +610,17 @@ class FleetExecutor:
                                metrics)
         new_state = FleetState(
             shard=new_shard,
-            fleet=F.allreduce_metrics(contrib, cfg.axis_name),
+            fleet=F.allreduce_metrics(contrib,
+                                      (cfg.region_axis, cfg.axis_name)),
             escalations_sent=s.escalations_sent + stats.escalations_sent,
+            fog_shed=s.fog_shed + stats.fog_shed,
             core_received=s.core_received + stats.core_received,
             core_processed=s.core_processed + stats.core_processed,
             fleet_core_overflow=s.fleet_core_overflow
             + stats.fleet_overflow,
             late_excluded=s.late_excluded + ing.n_late_excluded,
             watermark=wm.astype(jnp.float32),
+            region_watermark=rwm.astype(jnp.float32),
         )
         out = StepOutput(ing.aggregates, ing.features, ing.window_count,
                          ing.consequence, result.escalated, result.outputs)
@@ -526,6 +692,7 @@ class FleetExecutor:
                     jnp.asarray(self._healthy),
                     jnp.asarray(self._active),
                     jnp.asarray(self._budget, jnp.int32),
+                    jnp.asarray(self._region_budget, jnp.int32),
                     self._lat_hist,
                     jnp.asarray(self.last_step_seconds, jnp.float32))
             if self.measure_steps:
@@ -538,26 +705,33 @@ class FleetExecutor:
     # -- true re-mesh (the device set changed) ------------------------------
     def remesh(self, state: FleetState, devices: list, *,
                keep: list | None = None, num_core: int | None = None,
+               num_regions: int | None = None,
                fold_counters: dict | None = None
                ) -> tuple[FleetState, dict]:
         """Rebuild the fleet over a *changed device set* and migrate the
         state — churn beyond what the ``active`` mask can absorb.
 
         The new mesh is ``runtime.elastic.remesh`` over ``devices`` on
-        the single ``("edge",)`` axis; the re-laid-out state is placed
-        with ``runtime.elastic.reshard_state``.  Costs exactly one
-        re-trace on the next step (``trace_count <= 1 + retraces +
-        remeshes`` — the re-trace discipline the tests and benchmarks
-        assert).
+        the 2-D ``(region, edge)`` axes, resizing ONE axis per call:
+        by default the region count is preserved (``fixed_axis =
+        region_axis``) and the edge axis absorbs the device-count
+        change; pass ``num_regions`` to resize the region axis instead
+        (the edge width must then stay ``len(devices) // num_regions ==
+        edges_per_region``; resizing both axes at once is two remesh
+        calls).  The re-laid-out state is placed with
+        ``runtime.elastic.reshard_state``.  Costs exactly one re-trace
+        on the next step (``trace_count <= 1 + retraces + remeshes`` —
+        the re-trace discipline the tests and benchmarks assert).
 
-        ``keep``: for each NEW slot, the OLD shard index whose state row
-        (ring buffer, window carry, watermark, counters) it inherits, or
-        ``None`` for a freshly initialized row (a joiner).  Defaults to
-        identity truncation on shrink / identity plus fresh tail slots
-        on grow.  ``num_core`` defaults to the old value clamped to the
-        new width.  ``fold_counters``: optional {departed old index ->
-        surviving old index} — the departed shard's monotone counters
-        (its ``StreamMetrics`` row, ``late_excluded``, escalation
+        ``keep``: for each NEW slot (region-major flat numbering), the
+        OLD shard index whose state row (ring buffer, window carry,
+        watermark, counters) it inherits, or ``None`` for a freshly
+        initialized row (a joiner).  Defaults to identity truncation on
+        shrink / identity plus fresh tail slots on grow.  ``num_core``
+        defaults to the old value clamped to the new per-region width.
+        ``fold_counters``: optional {departed old index -> surviving
+        old index} — the departed shard's monotone counters (its
+        ``StreamMetrics`` row, ``late_excluded``, escalation/fog
         counters) are added into the surviving row so fleet totals
         survive the shrink.
 
@@ -577,9 +751,27 @@ class FleetExecutor:
         re-mesh is a ROADMAP follow-up."""
         cfg = self.cfg
         old_e = cfg.num_shards
-        new_mesh = elastic.remesh({cfg.axis_name: old_e}, list(devices),
-                                  (cfg.axis_name,))
-        new_e = new_mesh.shape[cfg.axis_name]
+        old_shape = {cfg.region_axis: cfg.num_regions,
+                     cfg.axis_name: cfg.edges_per_region}
+        axes = (cfg.region_axis, cfg.axis_name)
+        if num_regions is None or num_regions == cfg.num_regions:
+            # edge resize: the region count is the preserved axis
+            new_mesh = elastic.remesh(old_shape, list(devices), axes,
+                                      fixed_axis=cfg.region_axis)
+        else:
+            # region resize: the per-region edge width is preserved
+            new_mesh = elastic.remesh(old_shape, list(devices), axes,
+                                      fixed_axis=cfg.axis_name)
+            if new_mesh.shape[cfg.region_axis] != num_regions:
+                raise ValueError(
+                    f"{len(list(devices))} devices at edge width "
+                    f"{cfg.edges_per_region} form "
+                    f"{new_mesh.shape[cfg.region_axis]} regions, not "
+                    f"num_regions={num_regions} — resize one axis per "
+                    f"call")
+        new_r = new_mesh.shape[cfg.region_axis]
+        new_ee = new_mesh.shape[cfg.axis_name]
+        new_e = new_r * new_ee
         if keep is None:
             keep = [i if i < old_e else None for i in range(new_e)]
         if len(keep) != new_e:
@@ -607,14 +799,16 @@ class FleetExecutor:
                              f"departed={departed_idx}")
         for src, dst in fold_counters.items():
             for arr in (list(host.shard.metrics)
-                        + [host.escalations_sent, host.core_received,
-                           host.core_processed, host.late_excluded]):
+                        + [host.escalations_sent, host.fog_shed,
+                           host.core_received, host.core_processed,
+                           host.late_excluded]):
                 arr[dst] += arr[src]
 
         feature_dim = rb.buf.shape[-1] - 1
+        old_r = cfg.num_regions
         self.cfg = dataclasses.replace(
-            cfg, num_shards=new_e,
-            num_core=min(cfg.num_core, new_e) if num_core is None
+            cfg, num_shards=new_e, num_regions=new_r,
+            num_core=min(cfg.num_core, new_ee) if num_core is None
             else num_core)
         self.mesh = new_mesh
         fresh = jax.device_get(self.init_state(feature_dim))
@@ -623,6 +817,22 @@ class FleetExecutor:
                 [np.asarray(o[k]) if k is not None else np.asarray(f[j])
                  for j, k in enumerate(keep)]),
             host, fresh)
+        # regions are re-formed by the renumbering, so the per-region
+        # watermark restarts from scratch (it re-derives on the next
+        # tick; its monotone clamp is per region *identity*, which a
+        # remesh does not preserve).  The fleet reference keeps its
+        # migrated (replicated) value — fleet identity does persist
+        new_host = new_host._replace(region_watermark=np.full(
+            new_e, np.finfo(np.float32).min, np.float32))
+        # fog budgets re-derive for the new region set: the ceiling
+        # tracks the new config, surviving regions keep their budget
+        # clamped to it, new regions start at the configured initial
+        self._fog_slots = self.cfg.fog_slots
+        rbud = np.full(new_r, min(self.cfg.initial_fog_budget,
+                                  self._fog_slots), np.int32)
+        lap = min(old_r, new_r)
+        rbud[:lap] = np.minimum(self._region_budget[:lap], self._fog_slots)
+        self._region_budget = rbud
 
         self._healthy = np.asarray(
             [self._healthy[k] if k is not None else True for k in keep])
@@ -635,7 +845,7 @@ class FleetExecutor:
             self._lat_hist)))
         self._remeshes += 1
         self._build()                          # one re-trace, next step
-        spec = P(self.cfg.axis_name)
+        spec = P((self.cfg.region_axis, self.cfg.axis_name))
         new_state = elastic.reshard_state(
             new_host,
             lambda mesh: jax.tree.map(

@@ -31,7 +31,11 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import routing as RT
+from repro.stream.fleet.routing import (fog_recv_occupancy,
+                                        region_survivor_counts)
 
 
 def fleet_watermark(max_ts: jnp.ndarray, axis_name,
@@ -70,6 +74,89 @@ def fleet_watermark(max_ts: jnp.ndarray, axis_name,
                      max_ts, 1.0 - ha.astype(f), 1.0 - a.astype(f)])
     m = jax.lax.pmin(vec, axis_name)
     return jnp.where(m[3] < 0.5, m[0], jnp.where(m[4] < 0.5, m[1], m[2]))
+
+
+def tiered_watermark(max_ts: jnp.ndarray, region_axis, edge_axis,
+                     healthy: jnp.ndarray | None = None,
+                     active: jnp.ndarray | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Layered fleet watermark over a 2-D ``(region, edge)`` mesh:
+    returns ``(fleet_wm, region_wm)``.
+
+    The region watermark applies :func:`fleet_watermark`'s layered
+    healthy&active -> active -> plain fallback over the *edge* axis
+    only — the fog tier's close reference, replicated within a region.
+    The fleet watermark then layers the same fallback over the *region*
+    axis: regions with any healthy&active member first; if none
+    anywhere, regions with any active member; a fully-inactive fleet
+    falls back to the plain min.  With one region this reduces exactly
+    to :func:`fleet_watermark`, and with every shard healthy & active
+    both tiers collapse to the flat fleet's plain min — the oracle
+    equality the region tests pin.
+
+    Two stacked pmins total (one per mesh axis) — the same
+    one-collective-per-exchange discipline as the flat path."""
+    ones = jnp.ones((), bool)
+    h = ones if healthy is None else healthy.astype(bool)
+    a = ones if active is None else active.astype(bool)
+    ha = h & a
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, max_ts.dtype)
+    f = max_ts.dtype
+    vec = jnp.stack([jnp.where(ha, max_ts, big), jnp.where(a, max_ts, big),
+                     max_ts, 1.0 - ha.astype(f), 1.0 - a.astype(f)])
+    m = jax.lax.pmin(vec, edge_axis)
+    region_wm = jnp.where(m[3] < 0.5, m[0], jnp.where(m[4] < 0.5, m[1],
+                                                      m[2]))
+    # region tier: m[3] is 0 iff this region has any healthy&active
+    # member, m[4] 0 iff any active member — the per-region occupancy
+    # flags ride the second pmin alongside the candidate minima
+    fvec = jnp.stack([jnp.where(m[3] < 0.5, region_wm, big),
+                      jnp.where(m[4] < 0.5, region_wm, big),
+                      region_wm, m[3], m[4]])
+    fm = jax.lax.pmin(fvec, region_axis)
+    fleet_wm = jnp.where(fm[3] < 0.5, fm[0], jnp.where(fm[4] < 0.5, fm[1],
+                                                       fm[2]))
+    return fleet_wm, region_wm
+
+
+def layered_min_ref(max_ts, healthy=None, active=None):
+    """Host-side numpy reference of one layered watermark level (the
+    healthy&active -> active -> plain fallback) — the oracle the
+    hypothesis properties compare the device code against."""
+    max_ts = np.asarray(max_ts, np.float64)
+    h = np.ones(max_ts.shape, bool) if healthy is None \
+        else np.asarray(healthy, bool)
+    a = np.ones(max_ts.shape, bool) if active is None \
+        else np.asarray(active, bool)
+    ha = h & a
+    if ha.any():
+        return float(max_ts[ha].min())
+    if a.any():
+        return float(max_ts[a].min())
+    return float(max_ts.min())
+
+
+def tiered_watermark_ref(max_ts, healthy=None, active=None):
+    """Host-side numpy reference of :func:`tiered_watermark`:
+    ``max_ts``/masks are [R, E]; returns ``(fleet_wm, [R] region_wms)``.
+    """
+    max_ts = np.asarray(max_ts, np.float64)
+    r, _ = max_ts.shape
+    h = np.ones(max_ts.shape, bool) if healthy is None \
+        else np.asarray(healthy, bool)
+    a = np.ones(max_ts.shape, bool) if active is None \
+        else np.asarray(active, bool)
+    region = np.asarray([layered_min_ref(max_ts[i], h[i], a[i])
+                         for i in range(r)])
+    has_ha = (h & a).any(axis=1)
+    has_a = a.any(axis=1)
+    if has_ha.any():
+        fleet = region[has_ha].min()
+    elif has_a.any():
+        fleet = region[has_a].min()
+    else:
+        fleet = region.min()
+    return float(fleet), region
 
 
 class FederationStats(NamedTuple):
@@ -159,6 +246,175 @@ def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
         core_processed=jnp.sum(done_mask.astype(jnp.int32)),
         fleet_escalations=total,
         fleet_overflow=jnp.maximum(0, total - core_budget),
+    )
+    return core_out, core_feats, processed, stats
+
+
+class TieredStats(NamedTuple):
+    """Per-step counters of the two-hop (edge -> fog -> cloud)
+    escalation exchange (int32 scalars)."""
+    escalations_sent: jnp.ndarray    # this shard's fog-budget survivors
+    fog_shed: jnp.ndarray            # this shard's candidates shed by the
+    #                                  region (fog) budget
+    core_received: jnp.ndarray       # records landing on this core rank
+    core_processed: jnp.ndarray      # of those, under the fleet budget
+    region_escalations: jnp.ndarray  # region candidate total (replicated
+    #                                  within the region)
+    fleet_escalations: jnp.ndarray   # fleet survivor total (replicated)
+    fleet_overflow: jnp.ndarray      # fleet survivors beyond the core
+    #                                  budget (replicated)
+
+
+def federate_escalations_tiered(
+        records: jnp.ndarray, escalate: jnp.ndarray, run_core: Callable, *,
+        region_axis, edge_axis, num_regions: int, edges_per_region: int,
+        num_core: int, region_budget, core_budget, edge_capacity: int,
+        cross_capacity: int, core_slots: int
+        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, TieredStats]:
+    """Two-hop escalation exchange over the ``(region, edge)`` mesh:
+    fog pre-aggregation on the edge axis, then only region survivors
+    cross the region axis to the core sub-mesh.
+
+    Slot discipline (the flat path's determinism, one tier up):
+
+    1. one all_gather of counts on the **edge** axis gives every shard
+       its region's candidate layout; candidates get *region-local*
+       slots (edge-major) and the first ``region_budget`` survive the
+       fog budget — shed candidates keep their edge results, counted in
+       ``fog_shed``, and never ride any wire;
+    2. one all_gather of survivor totals on the **region** axis turns
+       region-local slots into *global* slots (region-major — with a
+       non-binding fog budget these are exactly the flat fleet's
+       shard-major slots, which is the bit-for-bit oracle equality);
+    3. hop 1: survivors ride one intra-region all-to-all to fog column
+       ``g % num_core`` (edge columns ``0..num_core-1``), buffer
+       ``[E, edge_capacity, row]``;
+    4. each fog column compacts its received survivors (flat receive
+       order is ascending global slot) into ``[cross_capacity, row]``
+       — ``cross_capacity`` derives from the fog-budget ceiling, NOT
+       from E, so hop 2 stops scaling with fleet width;
+    5. hop 2: one all-to-all on the region axis delivers every region's
+       compact batch to region 0 (the cloud), where receive validity
+       and the ``core_budget`` test are recomputed arithmetically from
+       the gathered survivor totals — no flag channel on the wire —
+       and the results ride the same two hops back.
+
+    ``region_budget`` and ``core_budget`` may be traced int32 scalars
+    (``region_budget`` is this region's own budget — per-region values
+    enter as a sharded operand); ``edge_capacity``, ``cross_capacity``
+    and ``core_slots`` are the static shape ceilings.  Any budget
+    values within the ceilings run on the same trace.
+
+    Returns ([N, R] core outputs, [N, F] core features, [N] bool
+    processed, :class:`TieredStats`).
+    """
+    ee, rr = edges_per_region, num_regions
+    n, r = records.shape
+    region_budget = jnp.asarray(region_budget, jnp.int32)
+    core_budget = jnp.asarray(core_budget, jnp.int32)
+    esc = escalate.astype(bool)
+    my_count = jnp.sum(esc.astype(jnp.int32))
+    counts = jax.lax.all_gather(my_count, edge_axis)           # [E]
+    eidx = jax.lax.axis_index(edge_axis).astype(jnp.int32)
+    ridx = jax.lax.axis_index(region_axis).astype(jnp.int32)
+    off_e = jnp.sum(jnp.where(jnp.arange(ee) < eidx, counts, 0))
+
+    # fog budget: candidates hold region-local slots off_e + k (edge-
+    # major); the first region_budget survive.  Slots are dense, so a
+    # shard's shed candidates are always a suffix of its own — the
+    # survivor prefix keeps candidate-local indices unchanged
+    e32 = esc.astype(jnp.int32)
+    q = off_e + jnp.cumsum(e32) - e32                          # [N] slots
+    surv = esc & (q < region_budget)
+    surv_counts = region_survivor_counts(counts, region_budget)  # [E]
+    my_surv = jnp.sum(surv.astype(jnp.int32))
+    region_total = jnp.sum(counts)
+    region_surv = jnp.sum(surv_counts)       # = min(total, budget)
+
+    # global slots: region-major over per-region survivor totals
+    rs_all = jax.lax.all_gather(region_surv, region_axis)      # [R]
+    roff = jnp.sum(jnp.where(jnp.arange(rr) < ridx, rs_all, 0))
+
+    # hop 1: intra-region all-to-all to fog column g % num_core.  The
+    # survivor prefix property above means escalation_plan's
+    # survivor-local cumsum equals the candidate-local one, so the
+    # plan's global slots are exactly roff + q
+    plan1, _ = RT.escalation_plan(surv, roff + off_e, ee, num_core,
+                                  edge_capacity)
+    with jax.named_scope("obs:all_to_all_out"):
+        send1 = RT.scatter_to_buckets(records, plan1, ee + 1,
+                                      edge_capacity)[:ee]
+        recv1 = RT.all_to_all_route(send1, edge_axis)  # [E, cap1, R]
+
+    # fog-column receive validity: survivor counts + this region's
+    # global offset give the occupied (src edge, slot) cells
+    # arithmetically — no flag channel on the wire, same as the flat
+    # path.  Every cell is under the fog budget by construction
+    occ1 = fog_recv_occupancy(surv_counts, eidx, roff, num_core,
+                              edge_capacity)
+
+    # compact this fog column's survivors: flat (src edge, slot) order
+    # is ascending global slot, so the compact batch is globally
+    # ordered and bounded by ceil(fog ceiling / num_core)
+    with jax.named_scope("obs:fog_compact"):
+        occ_flat = occ1.reshape(ee * edge_capacity)
+        plan2 = RT.make_plan(jnp.where(occ_flat, 0, 1).astype(jnp.int32),
+                             2, cross_capacity)
+        compact = RT.scatter_to_buckets(
+            recv1.reshape(ee * edge_capacity, r), plan2, 2,
+            cross_capacity)[0]                         # [cap2, R]
+
+    # hop 2: one cross-region all-to-all; only chunk 0 (to the cloud
+    # region) carries payload — the buffer is budget-sized, not E-sized
+    with jax.named_scope("obs:all_to_all_region"):
+        send2 = jnp.zeros((rr, cross_capacity, r),
+                          records.dtype).at[0].set(compact)
+        recv2 = RT.all_to_all_route(send2, region_axis)  # [R, cap2, R]
+
+    # cloud-side validity + fleet core budget: the same receive-slot
+    # arithmetic one tier up — per-region survivor totals play the
+    # per-shard counts' role.  Gated on region 0: other regions hold
+    # zero-filled buffers that must not claim phantom occupancy
+    at_core = ridx == 0
+    under2, occ2, _ = RT.escalation_recv_slots(rs_all, eidx, num_core,
+                                               cross_capacity, core_budget)
+    under2 = under2 & at_core
+    occ2 = occ2 & at_core
+    c_core = max(1, -(-core_slots // num_core))
+    with jax.named_scope("obs:core_compute"):
+        full_out, full_feats, done_mask = RT.compact_apply(
+            run_core, recv2.reshape(rr * cross_capacity, r),
+            under2.reshape(-1), c_core)
+    f = full_feats.shape[1]
+    done = done_mask.astype(records.dtype)
+
+    # the way back: results retrace both hops (cloud -> fog column ->
+    # origin shard), un-compacting with the same plans
+    with jax.named_scope("obs:all_to_all_back"):
+        payload = jnp.concatenate(
+            [full_out, full_feats, done[:, None]],
+            axis=1).reshape(rr, cross_capacity, r + f + 1)
+        back2 = RT.all_to_all_route(payload, region_axis)
+        resp_region = back2[0]                   # [cap2, R+F+1] from cloud
+        pad = jnp.zeros((2, cross_capacity, r + f + 1),
+                        payload.dtype).at[0].set(resp_region)
+        flat_back = RT.gather_from_buckets(pad, plan2)
+        back1 = RT.all_to_all_route(
+            flat_back.reshape(ee, edge_capacity, r + f + 1), edge_axis)
+        resp = RT.gather_from_buckets(back1, plan1)          # [N, R+F+1]
+    core_out = resp[:, :r]
+    core_feats = resp[:, r:r + f]
+    processed = (resp[:, -1] > 0.5) & plan1.keep
+
+    fleet_surv = jnp.sum(rs_all)
+    stats = TieredStats(
+        escalations_sent=my_surv,
+        fog_shed=my_count - my_surv,
+        core_received=jnp.sum(occ2.astype(jnp.int32)),
+        core_processed=jnp.sum(done_mask.astype(jnp.int32)),
+        region_escalations=region_total,
+        fleet_escalations=fleet_surv,
+        fleet_overflow=jnp.maximum(0, fleet_surv - core_budget),
     )
     return core_out, core_feats, processed, stats
 

@@ -1,0 +1,141 @@
+"""Tiered route plans for the hierarchical edge -> fog -> cloud fleet.
+
+The flat fleet rode every escalation on one fleet-wide all-to-all, so
+cross-fleet traffic scaled with fleet width E.  The 2-D
+``("region", "edge")`` mesh splits the exchange into two hops:
+
+  hop 1 (intra-region, ``edge`` axis)
+      every shard's fog-budget *survivors* ride one all-to-all to the
+      region's fog columns (edge columns ``0..num_core-1``) — traffic
+      proportional to the region's own width, and it never leaves the
+      region;
+  hop 2 (cross-region, ``region`` axis)
+      each fog column forwards its compacted survivor batch to region 0
+      (the cloud region hosting the core sub-mesh) in one all-to-all
+      whose per-device buffer is ``[R, cross_capacity, row]`` —
+      ``cross_capacity`` derives from the *fog budget*, not from E, so
+      cross-region volume stops scaling with fleet width.
+
+Slot discipline matches the flat fleet one tier up: candidates get
+deterministic *region-local* slots (edge-major), the first
+``region_budget`` survive (the fog budget — shed candidates keep their
+edge results), survivors get *global* slots (region-major), and the
+first ``core_budget`` global slots get core compute.  With one region
+and a non-binding fog budget this is bit-for-bit the flat fleet.
+
+Everything here is pure slot arithmetic usable from numpy (host-side
+recomputation, hypothesis properties) and jnp (inside the trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def region_survivor_counts(counts, budget):
+    """Per-edge survivor counts under a region escalation (fog) budget.
+
+    ``counts``: [E] candidates per edge shard, laid out in edge-major
+    region-local slot order (edge e's candidate k holds region slot
+    ``offset_e + k``).  ``budget``: the region's fog budget (may be a
+    traced int32 scalar).  A candidate survives iff its region slot is
+    ``< budget``, so survivors are a *prefix* of the region slot order:
+    edge e keeps ``clip(budget - offset_e, 0, counts_e)`` candidates.
+
+    Works for numpy and jnp inputs alike (the device code and the
+    host-side oracle recomputation share this one definition).
+    Invariants the property tests pin: ``0 <= out <= counts``
+    elementwise and ``sum(out) == min(sum(counts), max(budget, 0))``.
+    """
+    csum = counts.cumsum()
+    offsets = csum - counts                       # exclusive prefix
+    return (budget - offsets).clip(0, counts)
+
+
+def fog_recv_occupancy(surv_counts, col, region_offset, num_core: int,
+                       capacity: int):
+    """Receive-side occupancy of a fog column's hop-1 buffer.
+
+    Survivors route by *global* slot (``g = region_offset + q``, ``q``
+    the region-local slot) to fog column ``g % num_core`` — the same
+    column arithmetic as the flat fleet, which is what keeps the
+    ``(R, E)`` fleet bit-for-bit equal to the flat ``(R*E,)`` one.
+    That makes the first region-local slot landing on column ``col``
+    from edge ``e`` equal to ``(col - region_offset - offset_e) mod
+    num_core`` past ``offset_e`` — the plain
+    ``core.routing.escalation_recv_slots`` arithmetic shifted by the
+    region's global offset.
+
+    ``surv_counts``: [E] per-edge fog-budget survivor counts (their
+    cumsum gives the region-local slot offsets: shed candidates are
+    always a region-slot suffix, so survivor offsets equal candidate
+    offsets wherever any survivor exists).  ``col``: this device's edge
+    index; ``region_offset``: this region's exclusive prefix of
+    survivor totals (traced).  Returns [E, capacity] bool occupancy —
+    every cell under the fog budget by construction, so unlike the
+    core tier there is no budget test here."""
+    csum = surv_counts.cumsum()
+    offsets = csum - surv_counts
+    first = (col - region_offset - offsets) % num_core
+    sent = (-(-(surv_counts - first) // num_core)).clip(0, None)
+    k = _arange_like(surv_counts, capacity)
+    return (k[None, :] < sent[:, None]) & (col < num_core)
+
+
+def _arange_like(ref, n: int):
+    """``arange(n)`` in the array namespace of ``ref`` (np or jnp) —
+    the slot arithmetic here runs both inside the trace and as the
+    host-side numpy oracle the property tests compare against."""
+    if type(ref).__module__.startswith("numpy"):
+        return np.arange(n, dtype=ref.dtype)
+    import jax.numpy as jnp
+    return jnp.arange(n, dtype=ref.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredExchange:
+    """Static geometry of the two-hop escalation exchange.
+
+    ``edge_capacity`` is hop 1's per-(src, dest) slot count (the flat
+    fleet's ``route_capacity``: ``ceil(windows_per_step / num_core)``
+    — one shard never sends more than that to one fog column).
+    ``cross_capacity`` is hop 2's per-(region, region) slot count:
+    ``ceil(region_slots / num_core)`` — a region's survivors are capped
+    by its fog budget, and they fan round-robin over ``num_core`` fog
+    columns, so the cross-region buffer is sized by the *budget*.
+    """
+    num_regions: int
+    edges_per_region: int
+    num_core: int
+    edge_capacity: int
+    cross_capacity: int
+
+    def intra_region_bytes(self, record_width: int,
+                           itemsize: int = 4) -> int:
+        """One direction of hop 1, fleet-wide: every shard exchanges an
+        ``[E, edge_capacity, row]`` buffer *within its region*.  Scales
+        with region width — by design this traffic never crosses a
+        region boundary."""
+        e = self.edges_per_region
+        return (self.num_regions * e * e * self.edge_capacity
+                * record_width * itemsize)
+
+    def cross_region_bytes(self, record_width: int,
+                           itemsize: int = 4) -> int:
+        """One direction of hop 2, fleet-wide: each region's
+        ``num_core`` fog columns exchange an ``[R, cross_capacity,
+        row]`` buffer across the region axis.  Independent of
+        ``edges_per_region`` — the property the region bench asserts."""
+        r = self.num_regions
+        return (r * self.num_core * r * self.cross_capacity
+                * record_width * itemsize)
+
+    def flat_exchange_bytes(self, record_width: int,
+                            itemsize: int = 4) -> int:
+        """What the single-tier design moves across the fleet for the
+        same topology: every shard exchanges an ``[R*E, edge_capacity,
+        row]`` buffer with the whole fleet — the O(E) baseline the
+        region tier exists to beat."""
+        s = self.num_regions * self.edges_per_region
+        return s * s * self.edge_capacity * record_width * itemsize

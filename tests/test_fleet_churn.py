@@ -5,7 +5,12 @@ The subprocess scripts run with 8 forced host devices (same pattern as
 ``test_fleet.py``).  What they pin:
 
 * ``runtime.elastic.remesh`` handles 1-, 2-, and 3-axis shrink *and*
-  grow — the single-axis ``("edge",)`` path is what the fleet uses;
+  grow, and ``fixed_axis`` resizes either axis of the fleet's 2-D
+  ``("region", "edge")`` mesh independently;
+* on a multi-region fleet the replay backup is chosen *inside* the
+  departed shard's region while it has a live member (cross-region
+  fallback otherwise), and the churned run still equals the healthy
+  oracle per stream;
 * membership churn within the mesh width (leave -> backup replay ->
   join) produces output equal to a healthy-fleet oracle per *stream*,
   with zero dropped records, the ``items_replayed`` counter matching
@@ -78,6 +83,48 @@ _SCRIPT = textwrap.dedent("""
     try:
         remesh({"edge": 4}, [], ("edge",))
         assert False, "no devices must raise"
+    except ValueError:
+        pass
+
+    # fixed_axis: each axis of a 2-D ("region", "edge") mesh resizes
+    # independently -- the other keeps its size exactly
+    m = remesh({"region": 2, "edge": 4}, devs[:6], ("region", "edge"),
+               fixed_axis="region")                   # edge shrink
+    assert dict(m.shape) == {"region": 2, "edge": 3}, m.shape
+    m = remesh({"region": 2, "edge": 2}, devs, ("region", "edge"),
+               fixed_axis="region")                   # edge grow
+    assert dict(m.shape) == {"region": 2, "edge": 4}, m.shape
+    m = remesh({"region": 4, "edge": 2}, devs[:2], ("region", "edge"),
+               fixed_axis="edge")                     # region shrink
+    assert dict(m.shape) == {"region": 1, "edge": 2}, m.shape
+    m = remesh({"region": 1, "edge": 2}, devs[:8], ("region", "edge"),
+               fixed_axis="edge")                     # region grow
+    assert dict(m.shape) == {"region": 4, "edge": 2}, m.shape
+    # the fixed axis really is preserved whichever position it holds
+    m = remesh({"edge": 2, "region": 3}, devs[:6], ("edge", "region"),
+               fixed_axis="region")
+    assert dict(m.shape) == {"edge": 2, "region": 3}, m.shape
+    try:
+        remesh({"region": 2, "edge": 4}, devs[:5], ("region", "edge"),
+               fixed_axis="region")
+        assert False, "5 devices cannot keep region=2"
+    except ValueError:
+        pass
+    try:
+        remesh({"edge": 4}, devs[:2], ("edge",), fixed_axis="edge")
+        assert False, "single-axis mesh has nothing to preserve"
+    except ValueError:
+        pass
+    try:
+        remesh({"region": 2, "edge": 4}, devs, ("region", "edge"),
+               fixed_axis="pod")
+        assert False, "unknown fixed_axis must raise"
+    except ValueError:
+        pass
+    try:
+        remesh({"pod": 2, "data": 2, "model": 2}, devs,
+               ("pod", "data", "model"), fixed_axis="pod")
+        assert False, "fixed_axis is a 2-axis contract"
     except ValueError:
         pass
     print("REMESH_OK")
@@ -202,6 +249,88 @@ _SCRIPT = textwrap.dedent("""
     assert fx.trace_count <= ctl.max_trace_count
     print("CHURN_OK", exp_rep)
 
+    # --- hierarchical churn: the backup is chosen INSIDE the departed
+    # shard's region (replay traffic never crosses the region axis
+    # while the region has a live member), and the leave -> replay ->
+    # join arc still equals the healthy oracle per stream.  The healthy
+    # (2, 4) fleet is bit-for-bit the flat one, so the flat oracle
+    # collected above is the ground truth here too. -------------------
+    from repro.obs import EventLog
+    R_, EPER_ = 2, 4
+    SHARD5 = 5                           # region 1, edge column 1
+    fx5 = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=64, num_regions=R_),
+        engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine))
+    log5 = EventLog()
+    ctl5 = FleetController(
+        fx5, budget_policy=ElasticBudget(min_budget=64, max_budget=64),
+        event_log=log5)
+    inj5 = FaultInjector(FaultSchedule(
+        churn=[Churn(shard=SHARD5, leave=LEAVE, join=JOIN)]))
+    st5 = fx5.init_state(D)
+    churned5 = [collections.defaultdict(list) for _ in range(E)]
+    backups5 = {}
+    t = 0
+    while t < T or inj5.pending or t < T + 4:
+        if t == LEAVE:
+            backup5 = ctl5.leave(SHARD5)
+            assert backup5 is not None and backup5 != SHARD5
+            # backup locality: same region as the departed shard
+            assert backup5 // EPER_ == SHARD5 // EPER_, backup5
+            backups5 = {SHARD5: backup5}
+        if t == JOIN:
+            ctl5.join(SHARD5)
+        drain = t >= T
+        base = stream[t] if not drain else (
+            np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32))
+        items, ts, offered, replay = inj5.inject(t, *base,
+                                                 fresh=not drain,
+                                                 backups=backups5)
+        origin = inj5.origin.copy()
+        st5, out = fx5.step(st5, jnp.asarray(items), jnp.asarray(ts),
+                            offered=jnp.asarray(offered),
+                            replay=jnp.asarray(replay))
+        ctl5.tick(st5, step_times=np.full(E, 0.1))
+        for e in range(E):
+            if origin[e] >= 0:
+                collect(out, e, churned5[int(origin[e])])
+        t += 1
+    assert inj5.pending == 0
+    churned5 = [cat(c) for c in churned5]
+    md5 = st5.metrics.as_dict()
+    assert md5["shard"]["items_replayed"][backup5] > 0
+    assert md5["shard"]["items_late"] == [0] * E
+    for e in range(E):
+        assert churned5[e]["agg"].shape == oracle[e]["agg"].shape, e
+        np.testing.assert_allclose(churned5[e]["agg"], oracle[e]["agg"],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(e))
+        np.testing.assert_allclose(churned5[e]["outs"], oracle[e]["outs"],
+                                   rtol=1e-6, atol=1e-6, err_msg=str(e))
+    assert fx5.trace_count == 1, fx5.trace_count
+    asg = [r for r in log5.records if r["kind"] == "backup_assign"]
+    assert len(asg) == 1 and "intra-region" in asg[0]["cause"], asg
+
+    # region drained of live members: the backup falls back across the
+    # region boundary (and says so in the event log)
+    fx6 = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=64, num_regions=R_),
+        engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine))
+    log6 = EventLog()
+    ctl6 = FleetController(
+        fx6, budget_policy=ElasticBudget(min_budget=64, max_budget=64),
+        event_log=log6)
+    for s in (4, 6, 7):
+        b = ctl6.leave(s)
+        assert b is not None and b // EPER_ == 1, (s, b)
+    b = ctl6.leave(5)                    # region 1 has nobody left
+    assert b is not None and b // EPER_ == 0, b
+    asg6 = [r for r in log6.records if r["kind"] == "backup_assign"]
+    assert "cross-region fallback" in asg6[-1]["cause"], asg6[-1]
+    print("REGION_CHURN_OK", int(backup5))
+
     # --- short no-backup departure: the joiner drains the queued
     # backlog through the catch-up path — never the late-drop path.
     # (A departure shorter than the lag detector's ramp used to rejoin
@@ -307,6 +436,7 @@ def test_fleet_churn(tmp_path):
     assert out.returncode == 0, out.stderr[-3000:]
     assert "REMESH_OK" in out.stdout
     assert "CHURN_OK" in out.stdout
+    assert "REGION_CHURN_OK" in out.stdout
     assert "JOIN_CATCHUP_OK" in out.stdout
     assert "REMESH_FLEET_OK" in out.stdout
 

@@ -1,0 +1,391 @@
+"""Hierarchical federation tests: the 2-D ``(region, edge)`` fleet
+against an oracle tier (ISSUE 7).
+
+The subprocess scripts run with 8 forced host devices (same pattern as
+``test_fleet.py``).  What they pin:
+
+* **hierarchy oracle** — an ``(R, E)`` fleet is step-for-step equal to
+  (a) the flat ``(R*E,)`` fleet, bit for bit, and (b) ``R`` independent
+  single-region fleets plus a host-side merge, per stream, for tumbling
+  AND sliding windows — with ``trace_count == 1`` while the tracer and
+  latency-histogram instrumentation are ON;
+* **fog budget** — region pre-aggregation keeps the first
+  ``region_budget`` region slots (survivors are a prefix of the
+  edge-major slot order), sheds the rest with their edge results
+  intact, and only survivors reach the core; dynamic per-region budgets
+  resize without re-tracing inside the ceiling and cost exactly one
+  re-trace past it; the controller's per-region ``ElasticBudget`` loop
+  actuates them and logs ``fog_budget_resize`` events;
+* **axis re-mesh** — ``remesh`` resizes either mesh axis (one per
+  call) with ``trace_count <= 1 + retraces + remeshes`` across the arc.
+
+The main-process tests are seeded-random property checks over the
+numpy references (``region_survivor_counts``, ``fog_recv_occupancy``,
+``tiered_watermark_ref``) — the same invariants the hypothesis suite
+in ``test_property.py`` explores when hypothesis is installed.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.stream.fleet import (fog_recv_occupancy, layered_min_ref,
+                                region_survivor_counts,
+                                tiered_watermark_ref)
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    jax.config.update("jax_threefry_partitionable", True)
+    jax.config.update("jax_default_matmul_precision", "highest")
+
+    from repro.core import pipeline as pipe
+    from repro.core import rules
+    from repro.obs import EventLog, Tracer
+    from repro.runtime.elastic import ElasticBudget
+    from repro.stream import StreamConfig
+    from repro.stream.fleet import (FleetConfig, FleetController,
+                                    FleetExecutor, tiered_watermark_ref)
+
+    D, BATCH = 3, 32
+    R, EPER = 2, 4
+    E = R * EPER
+    edge_fn = lambda p, b: (b * 1.5, b[:, :5])
+    core_fn = lambda p, b: (b + 100.0, b[:, :5])
+
+    def two_tier(engine):
+        return pipe.two_tier_pipeline(edge_fn, core_fn, engine)
+
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 1.0, rules.C_SEND_CORE,
+                             priority=2),
+        rules.threshold_rule("sparse", 4, "<", 8.0, rules.C_STORE_EDGE,
+                             priority=1)])
+
+    def feed(rng, steps):
+        t0 = 0.0
+        for step in range(steps):
+            items = rng.standard_normal((E, BATCH, D)).astype(np.float32)
+            if step >= steps // 2:
+                items[:, :, 0] += 1.5          # hot regime: escalations
+            ts = np.tile(t0 + np.arange(BATCH, dtype=np.float32), (E, 1))
+            t0 += BATCH
+            yield jnp.asarray(items), jnp.asarray(ts)
+
+    # --- 1. hierarchy oracle: (R, E) == flat (R*E,) == R independents,
+    #        tumbling AND sliding, instrumentation ON -------------------
+    for mode, stride in (("tumbling", 16), ("sliding", 8)):
+        scfg = StreamConfig(micro_batch=BATCH, window=16, stride=stride,
+                            capacity=128, lateness=8.0)
+        flat = FleetExecutor(
+            FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                        core_budget=256), engine, two_tier(engine))
+        tier = FleetExecutor(
+            FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                        core_budget=256, num_regions=R), engine,
+            two_tier(engine))
+        tier.set_tracer(Tracer())          # trace bound holds with obs ON
+        subs = [FleetExecutor(
+            FleetConfig(stream=scfg, num_shards=EPER, num_core=2,
+                        core_budget=256), engine, two_tier(engine))
+            for _ in range(R)]
+        fs, hs = flat.init_state(D), tier.init_state(D)
+        ss = [sx.init_state(D) for sx in subs]
+        for items, ts in feed(np.random.default_rng(0), 8):
+            # the watermark a step installs closes over the PRE-step
+            # shard clocks: keep them for the reference comparison
+            mt_prev = np.asarray(hs.shard.max_ts).reshape(R, EPER)
+            fs, fo = flat.step(fs, items, ts)
+            hs, ho = tier.step(hs, items, ts)
+            # (a) bit-for-bit against the flat fleet, every output leaf
+            for name in fo._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(fo, name)),
+                    np.asarray(getattr(ho, name)),
+                    err_msg=f"{mode}:{name}")
+            # (b) per-region rows equal R independent single-region runs
+            for r in range(R):
+                ss[r], so = subs[r].step(ss[r], items[r*EPER:(r+1)*EPER],
+                                         ts[r*EPER:(r+1)*EPER])
+                for name in ("aggregates", "consequence", "escalated",
+                             "window_count"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(ho, name))[r*EPER:(r+1)*EPER],
+                        np.asarray(getattr(so, name)),
+                        err_msg=f"{mode}:region{r}:{name}")
+                np.testing.assert_allclose(
+                    np.asarray(ho.outputs)[r*EPER:(r+1)*EPER],
+                    np.asarray(so.outputs), rtol=1e-6, atol=1e-6)
+        assert tier.trace_count == 1, tier.trace_count
+        md_f, md_h = fs.metrics.as_dict(), hs.metrics.as_dict()
+        assert {k: v for k, v in md_f.items() if k != "region_watermark"} \\
+            == {k: v for k, v in md_h.items() if k != "region_watermark"}
+        # host-side merge of the R independents reproduces the hierarchy
+        sub_md = [s.metrics.as_dict() for s in ss]
+        for r in range(R):
+            for k, v in sub_md[r]["shard"].items():
+                assert md_h["shard"][k][r*EPER:(r+1)*EPER] == v, (r, k)
+            # the per-region watermark IS the region's own fleet close
+            # (replicated within the region, scalar in the sub-fleet)
+            assert md_h["region_watermark"][r*EPER:(r+1)*EPER] \\
+                == [sub_md[r]["watermark"]] * EPER, r
+        for k in sub_md[0]["fleet"]:
+            assert md_h["fleet"][k] == sum(s["fleet"][k] for s in sub_md)
+        assert md_h["watermark"] == min(
+            s["watermark"] for s in sub_md)
+        # device watermark agrees with the layered numpy reference
+        ref_fleet, ref_region = tiered_watermark_ref(mt_prev)
+        assert md_h["watermark"] == ref_fleet
+        np.testing.assert_array_equal(
+            np.asarray(md_h["region_watermark"]).reshape(R, EPER),
+            np.tile(ref_region[:, None], (1, EPER)))
+        print(f"ORACLE_{mode.upper()}_OK",
+              md_h["fleet"]["windows_escalated"])
+
+    # --- 2. fog budget: prefix survivors, shed keeps edge results,
+    #        dynamic resize inside/past the ceiling ---------------------
+    scfg = StreamConfig(micro_batch=BATCH, window=16, stride=8,
+                        capacity=128, lateness=8.0)
+    nw = scfg.windows_per_step
+    eng2 = rules.RuleEngine([
+        rules.threshold_rule("always", 0, ">=", -1e9, rules.C_SEND_CORE)])
+    FOG = 3
+    fx = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=256, num_regions=R, fog_budget=FOG,
+                    fog_budget_max=2 * EPER * nw),
+        eng2, two_tier(eng2))
+    st = fx.init_state(D)
+    rng = np.random.default_rng(1)
+    t0 = 0.0
+    def step_once():
+        global t0, st
+        items = rng.standard_normal((E, BATCH, D)).astype(np.float32)
+        ts = np.tile(t0 + np.arange(BATCH, dtype=np.float32), (E, 1))
+        t0 += BATCH
+        st, out = fx.step(st, jnp.asarray(items), jnp.asarray(ts))
+        return out
+    for _ in range(3):
+        out = step_once()
+    md = st.metrics.as_dict()
+    cand = R * EPER * nw                   # every window escalates
+    assert md["fleet"]["windows_escalated"] == 3 * cand
+    # each region forwards exactly its budget; the rest shed
+    assert sum(md["escalations_sent"]) == 3 * R * FOG
+    assert sum(md["fog_shed"]) == 3 * (cand - R * FOG)
+    assert sum(md["core_received"]) == 3 * R * FOG
+    assert sum(md["core_processed"]) == 3 * R * FOG
+    # survivors are a PREFIX of the edge-major region slot order: edge 0
+    # of each region keeps slots 0..FOG-1, sheds slot FOG, later edges
+    # shed everything
+    assert md["escalations_sent"][0::EPER] == [3 * FOG] * R
+    assert md["fog_shed"][0::EPER] == [3 * (nw - FOG)] * R
+    assert all(s == 0 for e in range(1, EPER)
+               for s in md["escalations_sent"][e::EPER])
+    # core work never leaves the core sub-mesh (flat shards 0..1)
+    assert all(c == 0 for c in md["core_received"][2:])
+    # shed candidates keep their edge results (scaled record, not zeros)
+    outs = np.asarray(out.outputs)
+    cored = (outs[..., 5:] > 50).all(-1)
+    assert cored.sum() == R * FOG
+    rec = np.concatenate([np.asarray(out.features),
+                          np.asarray(out.aggregates)], axis=-1)
+    np.testing.assert_allclose(outs[~cored], 1.5 * rec[~cored],
+                               rtol=1e-5, atol=1e-6)
+    assert fx.trace_count == 1, fx.trace_count
+
+    # asymmetric per-region budgets, still inside the static ceiling:
+    # no re-trace, and each region's quota applies independently
+    fx.set_region_budget([1, 5])
+    base_sent = sum(md["escalations_sent"])
+    step_once()
+    md = st.metrics.as_dict()
+    assert sum(md["escalations_sent"]) - base_sent == 1 + 5
+    assert fx.trace_count == 1, fx.trace_count
+    # growing past the ceiling is legal and costs exactly one re-trace
+    fx.set_region_budget(3 * EPER * nw)
+    step_once()
+    md = st.metrics.as_dict()
+    assert md["fog_shed"][-1] == md["fog_shed"][-2]   # now non-binding
+    assert fx.trace_count == 2, fx.trace_count
+    print("FOG_BUDGET_OK", sum(md["fog_shed"]))
+
+    # --- 3. controller loop: per-region ElasticBudget actuates the fog
+    #        budgets and logs fog_budget_resize events -------------------
+    log = EventLog()
+    fx3 = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=256, num_regions=R, fog_budget=2,
+                    fog_budget_max=2 * EPER * nw),
+        eng2, two_tier(eng2))
+    ctl = FleetController(
+        fx3, budget_policy=ElasticBudget(min_budget=256, max_budget=256),
+        event_log=log)
+    assert ctl.region_policies is not None \\
+        and len(ctl.region_policies) == R
+    st3 = fx3.init_state(D)
+    t3 = 0.0
+    decs = []
+    for _ in range(6):
+        items = rng.standard_normal((E, BATCH, D)).astype(np.float32)
+        ts = np.tile(t3 + np.arange(BATCH, dtype=np.float32), (E, 1))
+        t3 += BATCH
+        st3, _ = fx3.step(st3, jnp.asarray(items), jnp.asarray(ts))
+        decs.append(ctl.tick(st3, step_times=np.full(E, 0.1)))
+    # every region saturates its budget (all windows escalate), so the
+    # per-region policies grow both budgets within the ceiling
+    assert any(d.fog_resized for d in decs)
+    assert (decs[-1].region_budgets > 2).all(), decs[-1].region_budgets
+    assert (fx3.region_budget == decs[-1].region_budgets).all()
+    kinds = [r["kind"] for r in log.records]
+    assert "fog_budget_resize" in kinds
+    fog_evts = [r for r in log.records if r["kind"] == "fog_budget_resize"]
+    assert {e["region"] for e in fog_evts} == set(range(R))
+    assert all(e["budget_to"] > e["budget_from"] for e in fog_evts)
+    assert fx3.trace_count == 1 <= ctl.max_trace_count
+    print("FOG_CONTROL_OK", [int(b) for b in fx3.region_budget])
+
+    # --- 4. axis re-mesh arc: resize each mesh axis, one per call ------
+    devs = jax.devices()
+    fx4 = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=64, num_regions=R), engine,
+        two_tier(engine))
+    st4 = fx4.init_state(D)
+    def feed4(t, e):
+        items = np.random.default_rng(t).standard_normal(
+            (e, BATCH, D)).astype(np.float32)
+        ts = np.tile(t * BATCH + np.arange(BATCH, dtype=np.float32),
+                     (e, 1))
+        return jnp.asarray(items), jnp.asarray(ts)
+    for t in range(2):
+        st4, _ = fx4.step(st4, *feed4(t, E))
+    assert dict(fx4.mesh.shape) == {"region": 2, "edge": 4}
+    # edge resize: regions persist, each loses two edge columns
+    st4, _ = fx4.remesh(st4, devs[:4])
+    assert dict(fx4.mesh.shape) == {"region": 2, "edge": 2}
+    assert fx4.cfg.num_regions == 2 and fx4.cfg.num_shards == 4
+    for t in range(2, 4):
+        st4, _ = fx4.step(st4, *feed4(t, 4))
+    # region resize: edge width persists, one region folds away
+    st4, _ = fx4.remesh(st4, devs[:2], num_regions=1)
+    assert dict(fx4.mesh.shape) == {"region": 1, "edge": 2}
+    assert fx4.cfg.num_regions == 1 and fx4.cfg.num_shards == 2
+    for t in range(4, 6):
+        st4, _ = fx4.step(st4, *feed4(t, 2))
+    md4 = st4.metrics.as_dict()
+    assert md4["shard"]["steps"] == [6, 6]      # rows migrated both hops
+    assert fx4.remeshes == 2
+    assert fx4.trace_count <= 1 + fx4.remeshes == 3
+    # resizing both axes in one call is refused loudly
+    try:
+        fx4.remesh(st4, devs[:6], num_regions=2)
+        assert False, "2 regions x edge width 2 != 6 devices"
+    except ValueError as e:
+        assert "one axis per call" in str(e)
+    print("AXIS_REMESH_OK", fx4.trace_count)
+""")
+
+
+def test_fleet_regions_oracle(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = tmp_path / "fleet_regions.py"
+    script.write_text(_SCRIPT)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ORACLE_TUMBLING_OK" in out.stdout
+    assert "ORACLE_SLIDING_OK" in out.stdout
+    assert "FOG_BUDGET_OK" in out.stdout
+    assert "FOG_CONTROL_OK" in out.stdout
+    assert "AXIS_REMESH_OK" in out.stdout
+
+
+# --- seeded property checks on the numpy references ----------------------
+# (the hypothesis suite in test_property.py explores the same invariants
+# with generated inputs when hypothesis is installed)
+
+def test_region_survivor_counts_properties():
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        e = rng.integers(1, 9)
+        counts = rng.integers(0, 6, e).astype(np.int64)
+        budget = int(rng.integers(-2, counts.sum() + 3))
+        out = region_survivor_counts(counts, budget)
+        assert (0 <= out).all() and (out <= counts).all()
+        assert out.sum() == min(counts.sum(), max(budget, 0))
+        # survivors are a prefix of the edge-major slot order: once one
+        # edge sheds, every later edge sheds everything
+        cut = np.flatnonzero(out < counts)
+        if cut.size:
+            assert (out[cut[0] + 1:] == 0).all()
+
+
+def test_fog_recv_occupancy_matches_bruteforce():
+    """Receive occupancy equals a brute-force replay of the send rule
+    (global slot ``g = roff + q`` lands on column ``g % num_core``)."""
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        e = int(rng.integers(1, 7))
+        num_core = int(rng.integers(1, e + 1))
+        surv = rng.integers(0, 5, e).astype(np.int64)
+        roff = int(rng.integers(0, 17))
+        cap = int(surv.max(initial=1)) + 1
+        offs = surv.cumsum() - surv
+        for col in range(e):
+            occ = fog_recv_occupancy(surv, col, roff, num_core, cap)
+            expect = np.zeros((e, cap), bool)
+            if col < num_core:
+                for src in range(e):
+                    k = 0
+                    for q in range(offs[src], offs[src] + surv[src]):
+                        if (roff + q) % num_core == col:
+                            expect[src, k] = True
+                            k += 1
+            np.testing.assert_array_equal(occ, expect)
+        # fleet-wide conservation: every survivor lands exactly once
+        total = sum(fog_recv_occupancy(surv, c, roff, num_core, cap).sum()
+                    for c in range(e))
+        assert total == surv.sum()
+
+
+def test_tiered_watermark_ref_properties():
+    rng = np.random.default_rng(13)
+    for _ in range(200):
+        r, e = int(rng.integers(1, 5)), int(rng.integers(1, 5))
+        ts = rng.normal(0, 100, (r, e))
+        h = rng.random((r, e)) < 0.7
+        a = rng.random((r, e)) < 0.8
+        fleet, region = tiered_watermark_ref(ts, h, a)
+        # each region level is the layered single-axis reference
+        for i in range(r):
+            assert region[i] == layered_min_ref(ts[i], h[i], a[i])
+        # permutation-equivariance over edge order (per region)
+        perm = rng.permutation(e)
+        fleet_p, region_p = tiered_watermark_ref(
+            ts[:, perm], h[:, perm], a[:, perm])
+        assert fleet_p == fleet and (region_p == region).all()
+        # monotone: raising one shard's clock never lowers a watermark
+        i, j = rng.integers(r), rng.integers(e)
+        ts2 = ts.copy()
+        ts2[i, j] += abs(rng.normal(0, 50))
+        fleet2, region2 = tiered_watermark_ref(ts2, h, a)
+        assert fleet2 >= fleet and (region2 >= region).all()
+        # fleet == min over region watermarks, layered by per-region
+        # occupancy (plain min whenever every region has a live member)
+        ha_any = (h & a).any(1)
+        if ha_any.all():
+            assert fleet == region.min()
+        elif ha_any.any():
+            assert fleet == region[ha_any].min()
+    # no masks: plain 2-level min
+    ts = rng.normal(0, 10, (3, 4))
+    fleet, region = tiered_watermark_ref(ts)
+    assert fleet == ts.min() and (region == ts.min(1)).all()

@@ -51,18 +51,20 @@ def test_stream_metrics_golden_keys():
 def test_fleet_metrics_golden_keys():
     from repro.stream.fleet.executor import FleetMetrics
     assert FleetMetrics._fields == (
-        "shard", "fleet", "escalations_sent", "core_received",
-        "core_processed", "fleet_core_overflow", "late_excluded",
-        "watermark")
+        "shard", "fleet", "escalations_sent", "fog_shed",
+        "core_received", "core_processed", "fleet_core_overflow",
+        "late_excluded", "watermark", "region_watermark")
     zeros = StreamMetrics(*(jnp.zeros((2,), jnp.int32)
                             for _ in StreamMetrics._fields))
     m = FleetMetrics(shard=zeros, fleet=zeros,
                      escalations_sent=jnp.zeros((2,), jnp.int32),
+                     fog_shed=jnp.zeros((2,), jnp.int32),
                      core_received=jnp.zeros((2,), jnp.int32),
                      core_processed=jnp.zeros((2,), jnp.int32),
                      fleet_core_overflow=jnp.zeros((2,), jnp.int32),
                      late_excluded=jnp.zeros((2,), jnp.int32),
-                     watermark=jnp.zeros((2,), jnp.float32))
+                     watermark=jnp.zeros((2,), jnp.float32),
+                     region_watermark=jnp.zeros((2,), jnp.float32))
     d = m.as_dict()
     assert tuple(d) == FleetMetrics._fields
     assert tuple(d["shard"]) == StreamMetrics._fields
@@ -75,7 +77,8 @@ def test_event_schema_golden():
     assert EVENT_KINDS == frozenset({
         "budget_resize", "health_change", "leave", "join",
         "backup_assign", "remesh", "stall_buffer", "replay_queue",
-        "replay_delivery", "backlog_drain", "slot_drain", "requeue"})
+        "replay_delivery", "backlog_drain", "slot_drain", "requeue",
+        "fog_budget_resize"})
     assert ENVELOPE_FIELDS == ("seq", "wall_time", "tick", "kind",
                                "shard", "cause")
 

@@ -231,3 +231,90 @@ def test_elastic_budget_saturated_noop_keeps_patience(max_budget, patience,
     assert cold == list(range(1, ticks + 1))
     if ticks >= patience and eb2.min_budget < max_budget:
         assert eb2.propose(0, eb2.min_budget + 1) == eb2.min_budget
+
+
+# --- hierarchical federation (stream fleet region tier) -------------------
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       e=st.integers(1, 12),
+       budget=st.integers(-3, 80))
+def test_region_survivor_counts_property(seed, e, budget):
+    """Fog-budget survivors: bounded by the candidates, total exactly
+    min(candidates, budget), and a *prefix* of the edge-major region
+    slot order (once any edge sheds, every later edge sheds all)."""
+    from repro.stream.fleet import region_survivor_counts
+
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 9, e)
+    out = region_survivor_counts(counts, budget)
+    assert (0 <= out).all() and (out <= counts).all()
+    assert out.sum() == min(counts.sum(), max(budget, 0))
+    cut = np.flatnonzero(out < counts)
+    if cut.size:
+        assert (out[cut[0] + 1:] == 0).all()
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       e=st.integers(1, 6),
+       roff=st.integers(0, 40))
+def test_fog_recv_occupancy_conservation(seed, e, roff):
+    """Every fog-budget survivor lands on exactly one fog column at
+    exactly one slot — receive occupancy equals a brute-force replay of
+    'global slot g = region_offset + q goes to column g % num_core'."""
+    from repro.stream.fleet import fog_recv_occupancy
+
+    rng = np.random.default_rng(seed)
+    num_core = int(rng.integers(1, e + 1))
+    surv = rng.integers(0, 5, e)
+    cap = int(surv.max(initial=1)) + 1
+    offs = surv.cumsum() - surv
+    total = 0
+    for col in range(e):
+        occ = fog_recv_occupancy(surv, col, roff, num_core, cap)
+        expect = np.zeros((e, cap), bool)
+        if col < num_core:
+            for src in range(e):
+                k = 0
+                for q in range(offs[src], offs[src] + surv[src]):
+                    if (roff + q) % num_core == col:
+                        expect[src, k] = True
+                        k += 1
+        np.testing.assert_array_equal(occ, expect)
+        total += occ.sum()
+    assert total == surv.sum()
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       r=st.integers(1, 5),
+       e=st.integers(1, 5))
+def test_tiered_watermark_ref_property(seed, r, e):
+    """Layered 2-level watermark: per-region level equals the 1-D
+    layered reference, the fleet level is the min over region
+    watermarks (layered by region occupancy), and the whole thing is
+    monotone in every shard clock and equivariant to edge order."""
+    from repro.stream.fleet import layered_min_ref, tiered_watermark_ref
+
+    rng = np.random.default_rng(seed)
+    ts = rng.normal(0, 100, (r, e))
+    h = rng.random((r, e)) < 0.7
+    a = rng.random((r, e)) < 0.8
+    fleet, region = tiered_watermark_ref(ts, h, a)
+    for i in range(r):
+        assert region[i] == layered_min_ref(ts[i], h[i], a[i])
+    ha_any = (h & a).any(1)
+    if ha_any.all():
+        assert fleet == region.min()
+    elif ha_any.any():
+        assert fleet == region[ha_any].min()
+    perm = rng.permutation(e)
+    fleet_p, region_p = tiered_watermark_ref(ts[:, perm], h[:, perm],
+                                             a[:, perm])
+    assert fleet_p == fleet and (region_p == region).all()
+    i, j = rng.integers(r), rng.integers(e)
+    ts2 = ts.copy()
+    ts2[i, j] += abs(rng.normal(0, 50))
+    fleet2, region2 = tiered_watermark_ref(ts2, h, a)
+    assert fleet2 >= fleet and (region2 >= region).all()
