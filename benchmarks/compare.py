@@ -1,0 +1,143 @@
+"""Perf-regression gate: diff a fresh suite run against the committed
+``BENCH_<suite>.json`` baseline.
+
+``benchmarks/run.py <suite> --compare`` runs the suite, then calls
+:func:`compare_payloads` on the fresh rows vs the committed artifact:
+a readable delta table on stdout, exit 1 on regression.  Metrics are
+classified by *name*:
+
+* **timing / rate metrics** (``us_per_call`` and derived keys matching
+  :data:`TIMING_KEYS`) carry shared-CI noise, so they get a wide
+  relative tolerance (default 1.0 = a 2x slowdown flags, run-to-run
+  jitter does not) and only flag when *worse* (slower, lower
+  throughput, lower utilization) — getting faster is never a
+  regression.
+* **everything else** (counters, trace counts, byte accounting,
+  ``warmup_excluded``...) is semantic and must match **exactly** — a
+  changed trace count or exchange-byte total is a real behavior change
+  even when it is "better".
+
+A row present in the baseline but missing from the fresh run is a
+regression (a silently dropped benchmark reads as "covered" when it
+isn't); a *new* fresh row is reported informationally and passes (the
+baseline just needs regenerating to adopt it).
+"""
+from __future__ import annotations
+
+import json
+import re
+
+#: Derived-key patterns treated as noisy timing/rate metrics.  Grouped
+#: by direction: for ``_BIGGER_IS_BETTER`` keys a *drop* is the
+#: regression; for the rest (latencies, us-per-call) a *rise* is.
+_BIGGER_IS_BETTER = re.compile(
+    r"(items_per_s|windows_per_s|per_s$|gflops|gbs|_util$)")
+_TIMING = re.compile(
+    r"(us_per_call|_us$|_s$|seconds|gflops|gbs|items_per_s|"
+    r"windows_per_s|per_s$|_util$|^ai$)")
+
+#: Public alias (documented above).
+TIMING_KEYS = _TIMING
+
+
+def is_timing_key(key: str) -> bool:
+    """Does ``key`` name a noisy timing/rate metric (wide tolerance)
+    rather than a semantic counter (exact match)?"""
+    return bool(_TIMING.search(key))
+
+
+def _flatten(rows: list[dict]) -> dict:
+    """{(row name, metric key): value} over us_per_call + derived."""
+    out = {}
+    for r in rows:
+        out[(r["name"], "us_per_call")] = float(r["us_per_call"])
+        for k, v in (r.get("derived") or {}).items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[(r["name"], k)] = v
+    return out
+
+
+def _flagged_timing(key: str, fresh: float, base: float,
+                    rel_tol: float) -> bool:
+    """Worse than the tolerance band, directionally: a latency flags at
+    ``base * (1 + rel_tol)``, a throughput/utilization at ``base / (1 +
+    rel_tol)`` (a symmetric multiplicative band — an absolute-delta
+    band could never flag a rate metric, whose worst drop is 100%)."""
+    if _BIGGER_IS_BETTER.search(key):
+        return fresh * (1.0 + rel_tol) < base
+    return fresh > base * (1.0 + rel_tol)
+
+
+def compare_payloads(fresh_rows: list[dict], baseline: dict,
+                     rel_tol: float = 1.0) -> dict:
+    """Compare fresh suite rows against a committed BENCH payload.
+
+    ``fresh_rows``: ``bench_payload``-shaped rows (``derived`` already
+    a dict).  ``rel_tol`` is the relative tolerance for timing keys:
+    flag only when the fresh value is worse by more than ``rel_tol *
+    baseline`` (1.0 = 2x).  Returns::
+
+        {"regressions": [...], "deltas": [...], "new": [...],
+         "missing": [...], "ok": bool}
+
+    where each delta is ``(row, key, base, fresh, flagged)``.
+    """
+    fresh = _flatten(fresh_rows)
+    base = _flatten(baseline.get("rows", []))
+    regressions, deltas = [], []
+    missing = sorted(set(base) - set(fresh))
+    new = sorted(set(fresh) - set(base))
+    for rk in sorted(set(base) & set(fresh)):
+        b, f = base[rk], fresh[rk]
+        key = rk[1]
+        if is_timing_key(key):
+            flagged = _flagged_timing(key, f, b, rel_tol)
+        else:
+            flagged = f != b
+        deltas.append((rk[0], key, b, f, flagged))
+        if flagged:
+            regressions.append((rk[0], key, b, f))
+    for rk in missing:
+        regressions.append((rk[0], rk[1], base[rk], None))
+    return {"regressions": regressions, "deltas": deltas, "new": new,
+            "missing": missing, "ok": not regressions}
+
+
+def format_report(result: dict, suite: str, rel_tol: float = 1.0) -> str:
+    """Human-readable delta table for one suite comparison."""
+    lines = [f"== compare: {suite} (timing tolerance {rel_tol:+.0%}) =="]
+    lines.append(f"{'row':<28} {'metric':<22} {'baseline':>12} "
+                 f"{'fresh':>12}  status")
+    for name, key, b, f, flagged in result["deltas"]:
+        status = "REGRESSION" if flagged else "ok"
+        kind = "~" if is_timing_key(key) else "="
+        lines.append(f"{name:<28} {kind}{key:<21} {b:>12.4g} {f:>12.4g}"
+                     f"  {status}")
+    for name, key in result["missing"]:
+        lines.append(f"{name:<28} ={key:<21} {'present':>12} {'MISSING':>12}"
+                     f"  REGRESSION")
+    for name, key in result["new"]:
+        lines.append(f"{name:<28}  {key:<21} {'-':>12} {'new':>12}  info")
+    n = len(result["regressions"])
+    lines.append(f"{suite}: " + ("PASS (no regressions)" if not n
+                                 else f"FAIL ({n} regression(s))"))
+    return "\n".join(lines)
+
+
+def compare_suite(suite: str, fresh_rows: list[dict],
+                  baseline_path: str | None = None,
+                  rel_tol: float = 1.0) -> bool:
+    """Load ``BENCH_<suite>.json``, compare, print the report; returns
+    True when clean.  A missing baseline fails loudly — a gate that
+    silently passes with nothing to compare against is no gate."""
+    path = baseline_path or f"BENCH_{suite}.json"
+    try:
+        with open(path) as fh:
+            baseline = json.load(fh)
+    except FileNotFoundError:
+        print(f"== compare: {suite} ==\nno committed baseline at {path} "
+              f"(run `benchmarks.run {suite} --json` and commit it)")
+        return False
+    result = compare_payloads(fresh_rows, baseline, rel_tol)
+    print(format_report(result, suite, rel_tol))
+    return result["ok"]

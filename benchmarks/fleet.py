@@ -5,7 +5,10 @@ core escalation over a single all-to-all — for E in {1, 4, 8} under 8
 forced host devices, and reports sustained fleet throughput, median and
 p99 per-step latency, and the jit trace count (asserted == 1: the whole
 fleet tick is one XLA executable).  Emits the same CSV row schema as
-``benchmarks/streaming.py``.
+``benchmarks/streaming.py``, including the event-time lineage rows
+(per-stage ``fleet/E*_lat_*`` percentiles), the warmup-excluded device
+step histogram, and the ``fleet/E*_cost`` roofline coordinates from
+``obs.costmodel``.
 
 ``--faults`` runs the degraded-fleet smoke instead: a
 ``FleetController`` drives the elastic core budget and the
@@ -75,6 +78,7 @@ def _child():
     from benchmarks.common import row
     from repro.core import pipeline as pipe
     from repro.core import rules
+    from repro.obs import costmodel as CM
     from repro.stream import StreamConfig
     from repro.stream.fleet import FleetConfig, FleetExecutor
 
@@ -132,12 +136,38 @@ def _child():
             f"/{m['fleet']['windows_emitted']}"
             f";overflow={m['fleet_core_overflow']}"
             f";traces={ex.trace_count}")
-        # the in-step device histogram's view of the same run (includes
-        # warmup/compile ticks — its p99 bounds the host-measured one)
+        # the in-step device histogram's view of the same run (warmup/
+        # compile ticks are EXCLUDED — warmup_excluded counts them — so
+        # its tail tracks steady-state, not the one compile)
         h = ex.latency_percentiles()
         row(f"fleet/E{e}_hist", h["p50_us"],
             f"hist_p95_us={h['p95_us']:.1f}"
-            f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}")
+            f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}"
+            f";warmup_excluded={h['warmup_excluded']}")
+        # event-time lineage: per-stage percentiles of the same run
+        # (tick-quantized; in the flat R=1 mesh both hops run in the
+        # single region, so hop1/hop2 counts both equal escalations)
+        lin = ex.lineage_percentiles()
+        for stage in ("queueing", "window", "hop1", "hop2", "e2e"):
+            s = lin[stage]
+            row(f"fleet/E{e}_lat_{stage}", s["p50_us"],
+                f"p95_us={s['p95_us']:.1f};p99_us={s['p99_us']:.1f}"
+                f";count={s['count']}")
+        # device cost + roofline coordinates of ONE fleet tick (XLA's
+        # own post-fusion cost model over the whole sharded executable;
+        # utilization columns read $REPRO_PEAK_FLOPS/$REPRO_PEAK_BW,
+        # 0.0 = peak undeclared)
+        cost = ex.step_cost(
+            state, rng.standard_normal((e, BATCH, D)).astype(np.float32),
+            np.tile(t0 + np.arange(BATCH, dtype=np.float32), (e, 1)))
+        rl = CM.roofline(cost["flops"], cost["bytes_accessed"],
+                         float(np.median(lat)))
+        row(f"fleet/E{e}_cost", float(np.median(lat) * 1e6),
+            f"flops={cost['flops']:.0f}"
+            f";bytes={cost['bytes_accessed']:.0f}"
+            f";gflops={rl['gflops']:.4f};gbs={rl['gbs']:.4f}"
+            f";ai={rl['ai']:.4f};flops_util={rl['flops_util']:.6f}"
+            f";bw_util={rl['bw_util']:.6f}")
 
 
 def _hot_fixture():
@@ -266,11 +296,21 @@ def _child_faults():
     # the observability surface of the same degraded run: the event log
     # must reconstruct (causally ordered), and the in-step device
     # histogram yields percentiles without having cost a retrace
+    # (warmup/resize-retrace ticks excluded — warmup_excluded counts)
     EventLog.validate(log.records)
     h = ex.latency_percentiles()
     row("fleet/faults_hist", h["p50_us"],
         f"hist_p95_us={h['p95_us']:.1f}"
-        f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}")
+        f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}"
+        f";warmup_excluded={h['warmup_excluded']}")
+    # the stall's event-time signature: queueing latency is where a
+    # stalled shard's buffered tail shows up once it drains
+    lin = ex.lineage_percentiles()
+    row("fleet/faults_lat_queueing", lin["queueing"]["p50_us"],
+        f"p95_us={lin['queueing']['p95_us']:.1f}"
+        f";p99_us={lin['queueing']['p99_us']:.1f}"
+        f";count={lin['queueing']['count']}"
+        f";e2e_p99_us={lin['e2e']['p99_us']:.1f}")
     row("fleet/faults_events", float(len(log)),
         f"resizes={len(log.of_kind('budget_resize'))}"
         f";health={len(log.of_kind('health_change'))}"
@@ -519,6 +559,20 @@ def _child_regions():
             f"intra_region={ib};flat_equiv={fb}"
             f";cross_capacity={cfg.cross_capacity}"
             f";fog_budget={FOG}")
+        # two-hop lineage: hop1 (edge->fog) populates in every region,
+        # hop2 (fog->core) only on region 0's core ranks — the
+        # per-region view makes the confinement visible
+        lin = ex.lineage_percentiles()
+        for stage in ("hop1", "hop2", "e2e"):
+            s = lin[stage]
+            row(f"fleet/R{r}_lat_{stage}", s["p50_us"],
+                f"p95_us={s['p95_us']:.1f};p99_us={s['p99_us']:.1f}"
+                f";count={s['count']}")
+        per = ex.lineage_percentiles(by="region")
+        row(f"fleet/R{r}_lat_regions", float(r), ";".join(
+            f"r{i}_e2e_count={p['e2e']['count']}"
+            f";r{i}_hop2_count={p['hop2']['count']}"
+            for i, p in enumerate(per)))
 
 
 if __name__ == "__main__":

@@ -1,10 +1,24 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables —
+and the streaming path's roofline columns out of committed BENCH
+artifacts.
 
   PYTHONPATH=src python -m benchmarks.roofline_report reports/dryrun
+  PYTHONPATH=src:. python -m benchmarks.run roofline     # BENCH mode
+
+The first form renders the model-dryrun tables (needs a populated
+reports dir; a missing/empty dir prints usage and exits 2 instead of
+crashing).  The second re-emits every roofline-utilization column the
+streaming/fleet benches landed in their ``BENCH_<suite>.json``
+artifacts (``gflops``/``gbs``/``ai``/``flops_util``/``bw_util``, from
+``obs.costmodel``) — the streaming path's coverage in this report.
 """
+import glob
 import json
 import os
 import sys
+
+#: Roofline columns a BENCH row must carry to appear in the report.
+ROOFLINE_COLS = ("gflops", "gbs", "ai", "flops_util", "bw_util")
 
 
 def fmt_s(x):
@@ -21,6 +35,14 @@ def fmt_e(x):
     return f"{x:.2e}" if x is not None else "-"
 
 
+def usage() -> str:
+    return ("usage: python -m benchmarks.roofline_report [reports_dir]\n"
+            "  reports_dir: directory of dry-run JSONs "
+            "(default reports/dryrun)\n"
+            "  (for the streaming path's roofline columns, run "
+            "`python -m benchmarks.run roofline`)")
+
+
 def load(d):
     recs = []
     for name in sorted(os.listdir(d)):
@@ -29,9 +51,44 @@ def load(d):
     return recs
 
 
+def bench(directory: str = ".") -> None:
+    """``run.py roofline``: re-emit the roofline-utilization columns of
+    every committed ``BENCH_<suite>.json`` row that carries them, as
+    ordinary harness rows (``roofline/<suite>/<row>``).  Rows without
+    cost columns (counters-only rows) are skipped; suites without any
+    are noted so absence reads as absence, not coverage."""
+    from benchmarks import common
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError) as e:
+            print(f"# skipping unreadable {path}: {e}", file=sys.stderr)
+            continue
+        suite, hit = payload.get("suite", "?"), False
+        for r in payload.get("rows", []):
+            derived = r.get("derived") or {}
+            if not any(c in derived for c in ROOFLINE_COLS):
+                continue
+            hit = True
+            cols = ";".join(f"{c}={derived[c]}" for c in ROOFLINE_COLS
+                            if c in derived)
+            common.row(f"roofline/{suite}/{r['name']}",
+                       float(r["us_per_call"]), cols)
+        if not hit:
+            print(f"# {suite}: no roofline columns in its BENCH rows",
+                  file=sys.stderr)
+
+
 def main():
     d = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
+    if not os.path.isdir(d):
+        print(f"reports dir not found: {d}\n{usage()}", file=sys.stderr)
+        raise SystemExit(2)
     recs = load(d)
+    if not recs:
+        print(f"no dry-run JSONs in {d}\n{usage()}", file=sys.stderr)
+        raise SystemExit(2)
     sp = [r for r in recs if r.get("mesh") == "16x16"]
     mp = [r for r in recs if r.get("mesh") == "2x16x16"]
 

@@ -16,6 +16,7 @@ import numpy as np
 from benchmarks.common import row
 from repro.core import pipeline as pipe
 from repro.core import rules
+from repro.obs import costmodel as CM
 from repro.stream import StreamConfig, StreamExecutor
 
 D = 16            # sensor feature width
@@ -90,12 +91,38 @@ def bench():
         row(f"streaming/{backend}_p99", p99,
             f"esc={m['windows_escalated']}/{m['windows_emitted']}"
             f";traces={ex.trace_count}")
-        # the in-step device histogram's view of the same run (includes
-        # warmup/compile ticks — its p99 bounds the host-measured one)
+        # the in-step device histogram's view of the same run (warmup/
+        # compile ticks are EXCLUDED — warmup_excluded counts them — so
+        # its tail tracks steady-state, not the one compile)
         h = ex.latency_percentiles()
         row(f"streaming/{backend}_hist", h["p50_us"],
             f"hist_p95_us={h['p95_us']:.1f}"
-            f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}")
+            f";hist_p99_us={h['p99_us']:.1f};hist_count={h['count']}"
+            f";warmup_excluded={h['warmup_excluded']}")
+        # event-time lineage: per-stage percentiles of the same run
+        # (tick-quantized; single device, so hops stay empty)
+        lin = ex.lineage_percentiles()
+        for stage in ("queueing", "window", "e2e"):
+            s = lin[stage]
+            row(f"streaming/{backend}_lat_{stage}", s["p50_us"],
+                f"p95_us={s['p95_us']:.1f};p99_us={s['p99_us']:.1f}"
+                f";count={s['count']}")
+        # device cost + roofline coordinates of ONE tick at the bench
+        # shapes (XLA's own post-fusion cost model; utilization columns
+        # read $REPRO_PEAK_FLOPS/$REPRO_PEAK_BW, 0.0 = peak undeclared)
+        rng = np.random.default_rng(7)
+        cost = ex.step_cost(state,
+                            rng.standard_normal((BATCH, D)).astype(
+                                np.float32),
+                            np.arange(BATCH, dtype=np.float32))
+        rl = CM.roofline(cost["flops"], cost["bytes_accessed"],
+                         float(np.median(lat)))
+        row(f"streaming/{backend}_cost", float(np.median(lat) * 1e6),
+            f"flops={cost['flops']:.0f}"
+            f";bytes={cost['bytes_accessed']:.0f}"
+            f";gflops={rl['gflops']:.4f};gbs={rl['gbs']:.4f}"
+            f";ai={rl['ai']:.4f};flops_util={rl['flops_util']:.6f}"
+            f";bw_util={rl['bw_util']:.6f}")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,7 @@ import numpy as np                          # noqa: E402
 
 from repro.core import pipeline as pipe     # noqa: E402
 from repro.core import rules                # noqa: E402
-from repro.obs import EventLog, Tracer      # noqa: E402
+from repro.obs import SLO, EventLog, Tracer  # noqa: E402
 from repro.runtime.elastic import ElasticBudget            # noqa: E402
 from repro.runtime.straggler import StragglerDetector      # noqa: E402
 from repro.stream import StreamConfig       # noqa: E402
@@ -101,13 +101,19 @@ def main():
     tracer = Tracer()
     log = EventLog(os.environ.get("REPRO_OBS_EVENTS"))
     ex.set_tracer(tracer)
+    # ... plus a declared SLO: 95% of end-to-end window latencies
+    # under 50 ms, burn-rate-alerted (breach/recover transitions land
+    # in the event log; the level rides ControlDecision.slo_breached)
     ctl = FleetController(
         ex,
         budget_policy=ElasticBudget(min_budget=2, max_budget=32,
                                     patience=2),
         wall_detector=StragglerDetector(E, window=3, threshold=3.0,
                                         patience=2),
-        event_log=log, tracer=tracer)
+        event_log=log, tracer=tracer,
+        slos=(SLO("e2e-50ms", target_seconds=50e-3, stage="e2e",
+                  objective=0.95, fast_window=3, slow_window=10,
+                  burn_threshold=2.0),))
     sched = FaultSchedule([DEAD], churn=[GONE])
     inj = FaultInjector(sched, event_log=log)
     state = ex.init_state(D)
@@ -199,6 +205,15 @@ def main():
     print(f"\nstep latency (in-step device histogram, {lat['count']} "
           f"samples): p50 {lat['p50_us']:.0f}us, p95 {lat['p95_us']:.0f}us,"
           f" p99 {lat['p99_us']:.0f}us")
+    # record-level event-time lineage: every tuple stamped at ingest,
+    # latency measured per stage on-device (same donated-histogram
+    # trick — the trace bound above already covered it)
+    lin = ex.lineage_percentiles()
+    print("event-time lineage (per-stage p95):")
+    for stage in ("queueing", "window", "hop1", "hop2", "e2e"):
+        s = lin[stage]
+        print(f"  {stage:>8}: p95 {s['p95_us']:10.0f}us  "
+              f"({s['count']} samples)")
     disp = tracer.stage_percentiles().get("fleet.dispatch", {})
     print(f"host dispatch span: p50 {disp.get('p50_us', 0.0):.0f}us over "
           f"{disp.get('count', 0)} ticks")
@@ -208,6 +223,10 @@ def main():
           f"({', '.join(kinds)})"
           + (f" -> {log.path}" if log.path else ""))
     log.close()
+    trace_path = os.environ.get("REPRO_OBS_TRACE")
+    if trace_path:
+        tracer.export_chrome_trace(trace_path)
+        print(f"chrome trace -> {trace_path}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,14 @@ is only touched by the async spill/refill paths in ``data.pipeline``.
 Same guarantees the paper claims for its queue: persistence of accepted
 items until consumed (capacity permitting), FIFO delivery, and
 backpressure via explicit accept counts (instead of silent drops).
+
+The buffer is row-layout agnostic — it moves fixed-shape ``[*, D]``
+rows.  The stream tier's convention (see ``stream.executor.META_COLS``)
+is ``[event_ts | ingest_wall | features...]``: column 0 the event
+timestamp, column 1 the ingest wall-time stamp the latency lineage
+reads at dequeue (queueing delay = dequeue ``now`` minus column 1), the
+rest the feature payload.  Residency in this ring IS the queueing stage
+of the end-to-end latency lineage.
 """
 from __future__ import annotations
 

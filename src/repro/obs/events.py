@@ -47,6 +47,8 @@ EVENT_KINDS = frozenset({
     "slot_drain",        # a rejoined slot drained its own replay queue
     "requeue",           # remesh payload pushed back as replay deliveries
     "fog_budget_resize",  # a region's elastic fog budget changed
+    "slo_breach",        # an SLO's burn rate crossed threshold (both windows)
+    "slo_recover",       # a breached SLO's burn rate dropped back under
 })
 
 #: Envelope fields present on every record (payload keys ride alongside).

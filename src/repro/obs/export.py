@@ -26,8 +26,8 @@ BENCH_SCHEMA_VERSION = 1
 BENCH_KEYS = ("schema_version", "suite", "created_unix", "platform", "rows")
 
 #: Golden top-level keys of a metrics snapshot (tests pin this).
-SNAPSHOT_KEYS = ("schema_version", "kind", "metrics", "latency", "stages",
-                 "trace_count")
+SNAPSHOT_KEYS = ("schema_version", "kind", "metrics", "latency", "lineage",
+                 "stages", "trace_count")
 
 
 def parse_derived(derived: str) -> dict:
@@ -102,6 +102,7 @@ def metrics_snapshot(executor, state, kind: str | None = None) -> dict:
         "kind": kind or type(executor).__name__,
         "metrics": state.metrics.as_dict(),
         "latency": executor.latency_percentiles(),
+        "lineage": executor.lineage_percentiles(),
         "stages": tracer.stage_percentiles()
         if tracer is not None and tracer.enabled else {},
         "trace_count": executor.trace_count,

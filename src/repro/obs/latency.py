@@ -14,6 +14,21 @@ Buckets are log-spaced (``DEFAULT_EDGES``: 1 µs .. 100 s, ~17% ratio
 per bucket), so a reported percentile is exact to within one bucket
 ratio — ample for p50/p95/p99 step-latency reporting, and the
 resolution is a static constant, not data.
+
+The same machinery carries the **event-time latency lineage**: every
+micro-batch row is stamped with its ingest wall time (relative to the
+executor's epoch, an f32 column in the ring row), and each tick
+bucket-increments one histogram row per :data:`LINEAGE_STAGES` stage —
+queueing delay, window residency, the two escalation hops, and
+end-to-end — via :func:`histogram_update_batch` (a vectorized
+mask-validated scatter-add: fixed shapes, donated operand, zero added
+recompiles).  Latencies are quantized to the tick: every stage a
+record passes inside one tick shares the tick's dispatch timestamp, so
+sub-tick stage latencies land in bucket 0 ("< 1 tick") and the
+distribution's signal is cross-tick residency — ring backpressure,
+carry accumulation, stalls — which is exactly what an SLO watches.
+Sub-tick decomposition is the cost model's job (``obs.costmodel``
+attributes FLOPs/bytes to the named-scope stages of one tick).
 """
 from __future__ import annotations
 
@@ -23,6 +38,17 @@ import numpy as np
 #: Log-spaced bucket upper edges in seconds: 1 µs .. 100 s, 121 edges
 #: (122 buckets with the overflow bucket), ratio 10^(8/120) ~= 1.166.
 DEFAULT_EDGES = np.logspace(-6.0, 2.0, 121)
+
+#: Event-time lineage stages, in hot-path order.  ``queueing`` = ring
+#: admission -> dequeue (per row); ``window`` = ring admission of a
+#: window's *oldest* sample -> window emission (per emitted window);
+#: ``hop1`` = admission -> fog-column receive (per escalation survivor,
+#: measured on the receiving fog column); ``hop2`` = admission -> core
+#: rank receive (per record crossing the region axis, measured at the
+#: core); ``e2e`` = admission -> commit (per committed window — equals
+#: ``window`` whenever the whole exchange completes inside the tick,
+#: and diverges once execution overlaps ticks).
+LINEAGE_STAGES = ("queueing", "window", "hop1", "hop2", "e2e")
 
 
 def histogram_init(edges: np.ndarray = DEFAULT_EDGES) -> jnp.ndarray:
@@ -39,6 +65,64 @@ def histogram_update(counts: jnp.ndarray, value,
     value = jnp.asarray(value, jnp.float32)
     idx = jnp.searchsorted(jnp.asarray(edges, jnp.float32), value)
     return counts.at[idx].add(jnp.where(value > 0.0, 1, 0).astype(counts.dtype))
+
+
+def histogram_update_batch(counts: jnp.ndarray, values, mask,
+                           edges: np.ndarray = DEFAULT_EDGES
+                           ) -> jnp.ndarray:
+    """Bucket-increment ``counts`` with a batch of samples (traced;
+    fixed shape): ``values`` [N] f32 seconds, ``mask`` [N] bool.
+
+    Validity is the *explicit mask*, not positivity: a zero latency is
+    a real measurement here (a record that entered and left inside one
+    tick), so masked-in values are clamped up to the first bucket —
+    same-tick samples count in bucket 0 ("<= 1 µs", i.e. "< 1 tick" at
+    the lineage's tick-quantized resolution) instead of vanishing."""
+    e = jnp.asarray(edges, jnp.float32)
+    v = jnp.maximum(jnp.asarray(values, jnp.float32), e[0] * 0.5)
+    idx = jnp.searchsorted(e, v)
+    return counts.at[idx].add(jnp.asarray(mask).astype(counts.dtype))
+
+
+def histogram_merge(a, b):
+    """Merge two histograms (or stacks of histograms) by summing
+    counts.  Works on numpy and jnp alike; associative and commutative,
+    and pooling per-shard histograms this way equals having bucketed
+    every sample into one histogram — the property tests pin all
+    three."""
+    if isinstance(a, jnp.ndarray) or isinstance(b, jnp.ndarray):
+        return jnp.asarray(a) + jnp.asarray(b)
+    return np.asarray(a) + np.asarray(b)
+
+
+def lineage_init(edges: np.ndarray = DEFAULT_EDGES) -> jnp.ndarray:
+    """Zeroed per-stage lineage bank: ``[len(LINEAGE_STAGES), buckets]``
+    int32 — one histogram row per stage, carried through the traced
+    step as a single donated operand."""
+    return jnp.zeros((len(LINEAGE_STAGES), len(edges) + 1), jnp.int32)
+
+
+def lineage_update(bank: jnp.ndarray, samples: dict,
+                   edges: np.ndarray = DEFAULT_EDGES) -> jnp.ndarray:
+    """Batch-update stage rows of a lineage bank (traced).  ``samples``
+    maps stage names (:data:`LINEAGE_STAGES`) to ``(values, mask)``
+    pairs; stages absent this tick keep their counts unchanged."""
+    for name, (values, mask) in samples.items():
+        i = LINEAGE_STAGES.index(name)     # ValueError -> typo'd stage
+        bank = bank.at[i].set(
+            histogram_update_batch(bank[i], values, mask, edges))
+    return bank
+
+
+def lineage_percentiles(bank, qs=(50, 95, 99),
+                        edges: np.ndarray = DEFAULT_EDGES) -> dict:
+    """Host-side per-stage percentiles of a lineage bank.  ``bank`` is
+    ``[..., n_stages, buckets]`` — leading axes (per-shard rows) are
+    pooled by summation (:func:`histogram_merge` semantics)."""
+    c = np.asarray(bank, np.int64)
+    c = c.reshape(-1, c.shape[-2], c.shape[-1]).sum(axis=0)
+    return {name: histogram_percentiles(c[i], qs, edges)
+            for i, name in enumerate(LINEAGE_STAGES)}
 
 
 def histogram_percentiles(counts, qs=(50, 95, 99),

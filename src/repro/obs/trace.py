@@ -45,6 +45,19 @@ except Exception:                          # pragma: no cover
 
 _NULL_CTX = contextlib.nullcontext()
 
+#: Canonical ``jax.named_scope`` stage labels of the traced tick, in
+#: hot-path order (single-device prefix, then the fleet-only stages).
+#: ``obs.costmodel`` attributes HLO ops to these by compiled-metadata
+#: ``op_name`` substring match; keep in sync with the executors.
+DEVICE_STAGES = (
+    "obs:ingest", "obs:watermark", "obs:window", "obs:lineage",
+    "obs:rules", "obs:pipeline", "obs:metrics",
+    "obs:fleet_watermark", "obs:edge_stages", "obs:exchange_core",
+    "obs:all_to_all_out", "obs:fog_compact", "obs:all_to_all_region",
+    "obs:core_compute", "obs:all_to_all_back", "obs:core_commit",
+    "obs:latency",
+)
+
 
 class Tracer:
     """Accumulates named host spans; thread-safe appends.

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.core import rules as R
 from repro.core.pipeline import DataDrivenPipeline
 from repro.data import ringbuffer as rbuf
+from repro.obs import costmodel as OC
 from repro.obs import latency as OL
 from repro.obs.trace import NULL_TRACER
 from repro.stream import windows as W
@@ -108,9 +109,17 @@ def _zero_metrics() -> StreamMetrics:
                            for _ in StreamMetrics._fields))
 
 
+#: Ring rows are [ts | ingest_wall | features]: ``META_COLS`` leading
+#: metadata columns before the D feature columns.  Column 0 is the
+#: event timestamp; column 1 the *ingest wall time* (seconds since the
+#: executor's epoch, f32) stamped at enqueue — the birth stamp the
+#: event-time latency lineage measures every stage against.
+META_COLS = 2
+
+
 class StreamState(NamedTuple):
-    rb: rbuf.RingBuffer            # rows are [ts | features]: [cap, 1+D]
-    carry: jnp.ndarray             # [W-S, 1+D] trailing samples
+    rb: rbuf.RingBuffer            # [cap, META_COLS+D] rows (see above)
+    carry: jnp.ndarray             # [W-S, META_COLS+D] trailing samples
     carry_valid: jnp.ndarray       # [W-S] bool
     max_ts: jnp.ndarray            # [] f32 running max event time
     metrics: StreamMetrics
@@ -146,6 +155,9 @@ class IngestResult(NamedTuple):
     n_late: jnp.ndarray
     n_late_excluded: jnp.ndarray   # admitted, but late vs the fleet ref
     n_replayed: jnp.ndarray        # replay-mode records (never late-dropped)
+    q_lat: jnp.ndarray             # [B] f32 queueing delay per dequeued row
+    q_mask: jnp.ndarray            # [B] bool which rows were dequeued
+    w_birth: jnp.ndarray           # [NW] f32 oldest ingest stamp per window
 
 
 def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
@@ -154,7 +166,8 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
                       watermark_ts: jnp.ndarray | None = None,
                       offer_mask: jnp.ndarray | None = None,
                       excluded_ref: jnp.ndarray | None = None,
-                      replay: jnp.ndarray | None = None
+                      replay: jnp.ndarray | None = None,
+                      now: jnp.ndarray | float = 0.0
                       ) -> IngestResult:
     """enqueue -> dequeue -> watermark -> carry-continuous windows ->
     rule features, as one fixed-shape pure function.
@@ -188,12 +201,28 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
     tick's replay offer contributed are exempt.  (Replay offers do
     consume ring capacity like any offer: rows a full ring rejects
     surface in ``items_rejected``.)
+
+    ``now``: this tick's host wall time (seconds since the executor's
+    epoch, a traced f32 scalar).  Every enqueued row is stamped with it
+    (the lineage birth stamp: replayed rows get a *fresh* stamp at
+    redelivery — the replay detour is accounted by the event log, not
+    the lineage), and the lineage taps measure against it:
+
+    * ``q_lat``/``q_mask`` — per dequeued row, ``now - ingest_stamp``
+      (rows late-dropped by the watermark still spent that time queued,
+      so the mask is *dequeued*, not *valid*);
+    * ``w_birth`` — per window, the oldest valid sample's ingest stamp
+      (the window-residency and end-to-end measurements' reference;
+      all-invalid windows report 0 and are masked by ``emit``).
     """
     n_in = items.shape[0]
     held = state.rb.head - state.rb.tail       # rows queued before this offer
+    now = jnp.asarray(now, jnp.float32)
     with jax.named_scope("obs:ingest"):
         rows_in = jnp.concatenate(
-            [ts.astype(jnp.float32)[:, None], items.astype(jnp.float32)],
+            [ts.astype(jnp.float32)[:, None],
+             jnp.broadcast_to(now, (n_in, 1)),
+             items.astype(jnp.float32)],
             axis=1)
         if offer_mask is None:
             rb, n_acc = rbuf.enqueue(state.rb, rows_in)
@@ -237,12 +266,21 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
     with jax.named_scope("obs:window"):
         seq = jnp.concatenate([state.carry, rows], axis=0)
         seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
-        sig = seq[:, 1:]
+        sig = seq[:, META_COLS:]
         agg, wcount = W.sliding_window(
             sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
             backend=cfg.backend, partial=False, interpret=cfg.interpret)
         feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
                                      partial=False)
+    with jax.named_scope("obs:lineage"):
+        # lineage taps: per-row queueing delay + per-window birth stamp
+        # (oldest valid sample — the min reducer rides the same window
+        # framing as the aggregate, one metadata column instead of D)
+        q_lat = now - rows[:, 1]
+        w_birth, _ = W.sliding_window(
+            seq[:, 1:2], seq_valid, cfg.window, cfg.stride, reducer="min",
+            backend="jnp", partial=False)
+        w_birth = w_birth[:, 0]
 
     with jax.named_scope("obs:rules"):
         emit = wcount >= cfg.min_count
@@ -259,7 +297,8 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
         consequence=cons, emit=emit, record=record,
         n_in=n_offered, n_accepted=n_acc,
         n_dequeued=jnp.sum(valid.astype(jnp.int32)) + n_late,
-        n_late=n_late, n_late_excluded=n_lx, n_replayed=n_rep)
+        n_late=n_late, n_late_excluded=n_lx, n_replayed=n_rep,
+        q_lat=q_lat, q_mask=dequeued, w_birth=w_birth)
 
 
 def advance_metrics(m: StreamMetrics, ing: IngestResult,
@@ -306,20 +345,30 @@ class StreamExecutor:
         self._budget = None            # dynamic core budget (traced operand)
         self.last_step_seconds = 0.0   # host wall time of the last step()
         # observability: host span tracer (default disabled — near-zero
-        # cost) + on-device step-latency histogram.  The histogram is a
-        # fixed-shape donated operand fed the *previous* step's wall
-        # time, so percentile tracking adds zero recompiles.
+        # cost) + on-device step-latency histogram + per-stage lineage
+        # bank.  Both ride the step as fixed-shape donated operands (the
+        # histogram fed the *previous* step's wall time), so percentile
+        # tracking adds zero recompiles.
         self.tracer = NULL_TRACER
         self._lat_hist = OL.histogram_init()
+        self._lineage = OL.lineage_init()
+        self._t0 = time.perf_counter()     # lineage epoch (f32-friendly)
+        # warmup exclusion: a step that (re)traced measured compile
+        # time, not steady-state latency — its wall time is withheld
+        # from the histogram (fed as 0.0, the "missing measurement"
+        # sentinel) and counted instead
+        self._skip_feed = False
+        self.warmup_excluded = 0
         self._step_num = 0
-        self._jstep = jax.jit(self._step, donate_argnums=(0, 4))
+        self._jstep = jax.jit(self._step, donate_argnums=(0, 4, 5))
 
     # -- state ------------------------------------------------------------
     def init_state(self, feature_dim: int) -> StreamState:
         cfg = self.cfg
         return StreamState(
-            rb=rbuf.create(cfg.capacity, (1 + feature_dim,)),
-            carry=jnp.zeros((cfg.carry_len, 1 + feature_dim), jnp.float32),
+            rb=rbuf.create(cfg.capacity, (META_COLS + feature_dim,)),
+            carry=jnp.zeros((cfg.carry_len, META_COLS + feature_dim),
+                            jnp.float32),
             carry_valid=jnp.zeros((cfg.carry_len,), bool),
             max_ts=jnp.asarray(jnp.finfo(jnp.float32).min),
             metrics=_zero_metrics(),
@@ -330,6 +379,17 @@ class StreamExecutor:
         """Number of step traces so far — 1 after warmup, forever."""
         return self._traces
 
+    def _compile_count(self) -> int:
+        """Compiled step executables (>= trace_count: one trace can
+        compile again for new input shardings — e.g. the donated
+        histogram buffers come back device-committed after tick 0 —
+        which ``_traces`` never sees but costs compile-scale wall
+        time all the same)."""
+        try:
+            return int(self._jstep._cache_size())
+        except Exception:             # non-pjit stand-ins in tests
+            return self._traces
+
     def set_tracer(self, tracer) -> None:
         """Install an ``obs.Tracer`` for host-span instrumentation of
         ``step()`` (dispatch span + JAX profiler step annotation).
@@ -338,10 +398,37 @@ class StreamExecutor:
 
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
         """Step-latency percentiles from the on-device histogram (one
-        host transfer).  ``count`` is steps recorded so far — the first
-        step feeds the histogram on the *next* tick, so it trails
-        ``metrics.steps`` by one."""
-        return OL.histogram_percentiles(self._lat_hist, qs)
+        host transfer).  ``count`` is steps recorded so far — a step's
+        wall time feeds the histogram on the *next* tick, and steps
+        that (re)traced are excluded (their wall time is compile time,
+        which used to pollute p99 by ~6 orders of magnitude; the
+        ``warmup_excluded`` key counts them)."""
+        out = OL.histogram_percentiles(self._lat_hist, qs)
+        out["warmup_excluded"] = self.warmup_excluded
+        return out
+
+    def lineage_percentiles(self, qs=(50, 95, 99)) -> dict:
+        """Per-stage event-time latency percentiles (one host transfer
+        of the lineage bank): ``{stage: {"count": n, "p50_us": ...}}``
+        over :data:`repro.obs.latency.LINEAGE_STAGES`.  On a single
+        device the exchange hops are empty (no escalation wire), and
+        ``e2e`` equals window residency — everything commits in-tick.
+        Resolution is one tick (see ``obs.latency``)."""
+        return OL.lineage_percentiles(self._lineage, qs)
+
+    def step_cost(self, state: StreamState, items: jnp.ndarray,
+                  ts: jnp.ndarray) -> dict:
+        """XLA cost analysis of ONE tick at these operand shapes
+        (``obs.costmodel.analyze``): total FLOPs/bytes plus a per-
+        ``named_scope``-stage breakdown.  Lower + compile only —
+        nothing executes, no state is consumed — and after warmup the
+        compile hits jax's cache (same shapes as the traced step), so
+        this is safe to call on a live executor."""
+        return OC.analyze(
+            self._jstep, state, jnp.asarray(items), jnp.asarray(ts),
+            jnp.asarray(self._effective_budget(), jnp.int32),
+            self._lat_hist, self._lineage,
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32))
 
     @property
     def core_budget(self) -> int | None:
@@ -366,12 +453,14 @@ class StreamExecutor:
     # -- the single-trace step --------------------------------------------
     def _step(self, state: StreamState, items: jnp.ndarray,
               ts: jnp.ndarray, budget: jnp.ndarray,
-              lat_hist: jnp.ndarray, last_dt: jnp.ndarray
-              ) -> tuple[StreamState, StepOutput, jnp.ndarray]:
+              lat_hist: jnp.ndarray, lineage: jnp.ndarray,
+              last_dt: jnp.ndarray, now: jnp.ndarray
+              ) -> tuple[StreamState, StepOutput, jnp.ndarray, jnp.ndarray]:
         # the Python body runs exactly once per jit trace, so this
         # counts (re)traces without reaching into jit internals
         self._traces += 1
-        ing = ingest_and_window(self.cfg, self.engine, state, items, ts)
+        ing = ingest_and_window(self.cfg, self.engine, state, items, ts,
+                                now=now)
 
         # non-emitted windows (count < min_count) enter the pipeline
         # dead: no rules, no escalation, no core-capacity consumption
@@ -388,13 +477,21 @@ class StreamExecutor:
                 jnp.sum(result.stored.astype(jnp.int32)),
                 jnp.sum(result.dropped.astype(jnp.int32)), overflow)
             lat_hist = OL.histogram_update(lat_hist, last_dt)
+        with jax.named_scope("obs:lineage"):
+            w_lat = now - ing.w_birth
+            lineage = OL.lineage_update(lineage, {
+                "queueing": (ing.q_lat, ing.q_mask),
+                "window": (w_lat, ing.emit),
+                "e2e": (w_lat, ing.emit),
+            })
         new_state = StreamState(
             rb=ing.rb, carry=ing.carry, carry_valid=ing.carry_valid,
             max_ts=ing.max_ts, metrics=metrics,
         )
         return new_state, StepOutput(ing.aggregates, ing.features,
                                      ing.window_count, ing.consequence,
-                                     escalated, result.outputs), lat_hist
+                                     escalated, result.outputs), \
+            lat_hist, lineage
 
     # -- public API ---------------------------------------------------------
     def step(self, state: StreamState, items: jnp.ndarray,
@@ -407,24 +504,36 @@ class StreamExecutor:
         Timestamps ride the ring as float32 (one row per sample), so
         event-time resolution degrades past ~2^24 time units; scale
         long-running tick counters (e.g. seconds since stream start,
-        not epoch nanoseconds) to stay inside that range.
+        not epoch nanoseconds) to stay inside that range.  The lineage
+        ingest stamp (row column 1) is wall seconds since executor
+        construction — the same f32 caveat applies after ~2^24 seconds
+        (about six months of uptime; restart the epoch before then).
 
         ``last_step_seconds`` records the host wall time of the call —
         dispatch time unless the caller synchronizes, the full step if
         it does (the control plane feeds these into its straggler
         detector; real deployments substitute per-device telemetry).
         The previous step's wall time also feeds the on-device latency
-        histogram (``latency_percentiles()``) as a traced operand."""
+        histogram (``latency_percentiles()``) as a traced operand —
+        except after a (re)trace, whose wall time is compile time: that
+        sample is withheld (``warmup_excluded``) so one warmup tick can
+        never masquerade as a million-microsecond p99."""
         self._step_num += 1
+        feed = 0.0 if self._skip_feed else self.last_step_seconds
+        if self._skip_feed and self.last_step_seconds > 0.0:
+            self.warmup_excluded += 1
+        compiles_before = self._compile_count()
         t0 = time.perf_counter()
         with self.tracer.step_annotation("stream_step", self._step_num), \
                 self.tracer.span("stream.dispatch", step=self._step_num):
-            state, out, self._lat_hist = self._jstep(
+            state, out, self._lat_hist, self._lineage = self._jstep(
                 state, items, ts,
                 jnp.asarray(self._effective_budget(), jnp.int32),
-                self._lat_hist,
-                jnp.asarray(self.last_step_seconds, jnp.float32))
+                self._lat_hist, self._lineage,
+                jnp.asarray(feed, jnp.float32),
+                jnp.asarray(time.perf_counter() - self._t0, jnp.float32))
         self.last_step_seconds = time.perf_counter() - t0
+        self._skip_feed = self._compile_count() > compiles_before
         return state, out
 
     def run(self, state: StreamState,

@@ -54,6 +54,7 @@ import jax
 import numpy as np
 
 from repro.obs.events import EventLog
+from repro.obs.slo import SloEvaluator
 from repro.obs.trace import NULL_TRACER
 from repro.runtime.elastic import ElasticBudget
 from repro.runtime.straggler import StragglerDetector
@@ -71,6 +72,9 @@ class ControlDecision(NamedTuple):
     watermark: float              # fleet reference used by the last tick
     region_budgets: np.ndarray | None = None  # [R] fog budgets in force
     fog_resized: bool = False     # did any fog budget change this tick
+    slo_breached: tuple = ()      # names of SLOs in breach after this tick
+    #                               (level, not transition — the policy
+    #                               signal; transitions land in the log)
 
 
 @dataclasses.dataclass
@@ -103,8 +107,10 @@ class FleetController:
     lag_tolerance: float | None = None
     event_log: EventLog | None = None
     tracer: object = NULL_TRACER
+    slos: tuple = ()
     _prev_escalated: np.ndarray = None
     _prev_healthy: np.ndarray = None
+    _slo_eval: SloEvaluator | None = None
     _resizes: int = 0
     _retraces: int = 0
     _ticks: int = 0
@@ -145,6 +151,9 @@ class FleetController:
             self._prev_escalated = np.zeros(e, np.int64)
         if self._prev_healthy is None:
             self._prev_healthy = np.ones(e, bool)
+        self.slos = tuple(self.slos)
+        if self.slos and self._slo_eval is None:
+            self._slo_eval = SloEvaluator(self.slos)
 
     @property
     def resizes(self) -> int:
@@ -413,11 +422,40 @@ class FleetController:
                         escalated=int(demand[i]),
                         retraced=bool(fog_retraced))
             region_budgets = ex.region_budget
+
+        # -- SLO burn-rate lane ----------------------------------------
+        # feed the evaluator cumulative telemetry (it differences
+        # internally): the pooled lineage bank for latency SLOs, the
+        # fleet drop/emit counters for drop SLOs.  Breach/recover
+        # *transitions* land in the event log with both burn rates; the
+        # breach *level* rides the decision as a policy signal (the
+        # autoscaling ROADMAP item's input)
+        slo_breached = ()
+        if self._slo_eval is not None:
+            dropped, emitted = (
+                int(np.asarray(v).reshape(-1)[0]) for v in jax.device_get(
+                    (state.fleet.windows_dropped,
+                     state.fleet.windows_emitted)))
+            for st in self._slo_eval.observe(bank=ex.lineage_counts(),
+                                             drops=(dropped, emitted)):
+                if st.breached or st.recovered:
+                    self._emit(
+                        "slo_breach" if st.breached else "slo_recover",
+                        cause=f"{st.slo.stage} burn rate "
+                              f"{'over' if st.breached else 'back under'} "
+                              f"{st.slo.burn_threshold}x in both windows",
+                        slo=st.slo.name, stage=st.slo.stage,
+                        target_seconds=float(st.slo.target_seconds),
+                        objective=float(st.slo.objective),
+                        fast_burn=round(float(st.fast_burn), 4),
+                        slow_burn=round(float(st.slow_burn), 4))
+            slo_breached = self._slo_eval.breaching
         return ControlDecision(
             budget=ex.core_budget, resized=resized, retraced=retraced,
             healthy=healthy, stragglers=flagged, escalated=escalated,
             watermark=float(np.asarray(wm).reshape(-1)[0]),
-            region_budgets=region_budgets, fog_resized=fog_resized)
+            region_budgets=region_budgets, fog_resized=fog_resized,
+            slo_breached=slo_breached)
 
     @property
     def max_trace_count(self) -> int:
@@ -557,17 +595,20 @@ class FaultInjector:
 
     def requeue(self, stream: int, rows: np.ndarray,
                 batch: int) -> None:
-        """Push raw ``[k, 1+D]`` ring rows (``ts`` in column 0) onto
+        """Push raw ``[k, 2+D]`` ring rows (``ts`` in column 0, the
+        ingest stamp in column 1 — the stamp is dropped here: replayed
+        rows get *fresh* stamps at redelivery, so the replay detour
+        shows in the event log, not the latency lineage) onto
         ``stream``'s replay queue as ``<= batch``-sized deliveries —
         the landing pad for ``FleetExecutor.remesh``'s departed-shard
         payload (a dead device's unconsumed ring, re-run elsewhere)."""
         for lo in range(0, len(rows), batch):
             chunk = rows[lo:lo + batch]
-            n, d = chunk.shape[0], chunk.shape[1] - 1
+            n, d = chunk.shape[0], chunk.shape[1] - 2
             items = np.zeros((batch, d), np.float32)
             t = np.zeros((batch,), np.float32)
             mask = np.zeros((batch,), bool)
-            items[:n], t[:n], mask[:n] = chunk[:, 1:], chunk[:, 0], True
+            items[:n], t[:n], mask[:n] = chunk[:, 2:], chunk[:, 0], True
             self._replay[stream].append((items, t, mask))
         self._emit("requeue", None, shard=int(stream),
                    cause="remesh payload re-queued for replay",

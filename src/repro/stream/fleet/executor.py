@@ -75,12 +75,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.runtime import elastic
 
 from repro.core import rules as R
+from repro.obs import costmodel as OC
 from repro.obs import latency as OL
 from repro.obs.trace import NULL_TRACER
 from repro.core.pipeline import DataDrivenPipeline
 from repro.data import ringbuffer as rbuf
-from repro.stream.executor import (StepOutput, StreamConfig, StreamMetrics,
-                                   StreamState, _zero_metrics,
+from repro.stream.executor import (META_COLS, StepOutput, StreamConfig,
+                                   StreamMetrics, StreamState, _zero_metrics,
                                    advance_metrics, ingest_and_window)
 from repro.stream.fleet import federation as F
 from repro.stream.fleet import routing as FR
@@ -327,6 +328,24 @@ class FleetExecutor:
         # the same jit as the fleet step, outside the shard_map)
         self.tracer = NULL_TRACER
         self._lat_hist = OL.histogram_init()
+        # event-time latency lineage: one [n_stages, buckets] histogram
+        # bank PER SHARD ([S, n_stages, buckets], sharded like the
+        # state), updated inside the shard_map from the rows' ingest
+        # stamps — fixed shape, donated, zero added recompiles.  The
+        # leading shard axis is what per-shard / per-region breakdowns
+        # pool over (histogram_merge semantics)
+        self._lineage = jnp.tile(OL.lineage_init()[None],
+                                 (cfg.num_shards, 1, 1))
+        self._t0 = time.perf_counter()     # lineage epoch (f32 stamps)
+        # warmup exclusion: a tick that compiled measures
+        # compile+execute wall time — withhold it from the NEXT tick's
+        # histogram feed (see step()).  Keyed on the jit *executable*
+        # cache, not the trace counter: tick 1 re-compiles the same
+        # trace for device-committed input shardings (the donated
+        # histogram buffers come back sharded), which _traces never
+        # sees but costs compile-scale wall time all the same.
+        self._skip_feed = False
+        self.warmup_excluded = 0
         self._step_num = 0
         # when True (default), step() blocks on the output so
         # last_step_seconds measures device execution — the control
@@ -352,23 +371,25 @@ class FleetExecutor:
         rspec = P(cfg.region_axis)
         sharded = shard_map(self._fleet_step, mesh=self.mesh,
                             in_specs=(spec, spec, spec, spec, spec, spec,
-                                      spec, P(), rspec),
-                            out_specs=(spec, spec))
+                                      spec, P(), rspec, spec, P()),
+                            out_specs=(spec, spec, spec))
 
         def _traced(state, items, ts, offered, replay, healthy, active,
-                    budget, region_budget, lat_hist, last_dt):
+                    budget, region_budget, lat_hist, lineage, last_dt,
+                    now):
             # outer jit body runs once per trace (shard_map may re-trace
             # its inner fn during lowering; don't count those)
             self._traces += 1
-            out = sharded(state, items, ts, offered, replay, healthy,
-                          active, budget, region_budget)
+            new_state, out, lineage = sharded(
+                state, items, ts, offered, replay, healthy, active,
+                budget, region_budget, lineage, now)
             # step-latency histogram: replicated, updated outside the
             # shard_map (one tick = one host-measured wall time)
             with jax.named_scope("obs:latency"):
                 lat_hist = OL.histogram_update(lat_hist, last_dt)
-            return out, lat_hist
+            return (new_state, out), lat_hist, lineage
 
-        self._jstep = jax.jit(_traced, donate_argnums=(0, 9))
+        self._jstep = jax.jit(_traced, donate_argnums=(0, 9, 10))
 
     # -- control-plane knobs (host-side, between ticks) --------------------
     @property
@@ -478,10 +499,69 @@ class FleetExecutor:
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
         """Fleet-tick latency percentiles from the on-device histogram
         (one host transfer).  ``count`` trails ``metrics.steps`` by one
-        — a tick's wall time feeds the histogram on the next tick.  The
+        — a tick's wall time feeds the histogram on the next tick — and
+        additionally excludes warmup: a tick that traced (compiled)
+        measured compile+execute, so its wall time is withheld
+        (``warmup_excluded`` counts the withheld samples).  The
         histogram survives :meth:`remesh` (it is per-executor, not
         per-shard state)."""
-        return OL.histogram_percentiles(self._lat_hist, qs)
+        out = OL.histogram_percentiles(self._lat_hist, qs)
+        out["warmup_excluded"] = self.warmup_excluded
+        return out
+
+    def lineage_percentiles(self, by: str | None = None,
+                            qs=(50, 95, 99)):
+        """Per-stage event-time latency percentiles
+        (:data:`obs.latency.LINEAGE_STAGES`) from the on-device lineage
+        banks (one host transfer).
+
+        ``by=None`` pools every shard's bank into one fleet-wide dict;
+        ``by="shard"`` returns a list of S dicts (region-major flat
+        numbering); ``by="region"`` pools each region's shards and
+        returns a list of R dicts.  Pooling is histogram summation —
+        associative/commutative and equal to having bucketed every
+        sample into one histogram, so the three views are consistent.
+
+        Note the stages measure where latency is *experienced*: hop1
+        populates on each region's fog columns, hop2 only on region 0's
+        core ranks — per-region hop2 rows outside region 0 are empty by
+        construction."""
+        bank = np.asarray(jax.device_get(self._lineage), np.int64)
+        if by is None:
+            return OL.lineage_percentiles(bank, qs)
+        if by == "shard":
+            return [OL.lineage_percentiles(bank[i], qs)
+                    for i in range(bank.shape[0])]
+        if by == "region":
+            rr = self.cfg.num_regions
+            pooled = bank.reshape((rr, -1) + bank.shape[1:]).sum(axis=1)
+            return [OL.lineage_percentiles(pooled[i], qs)
+                    for i in range(rr)]
+        raise ValueError(f"by must be None, 'shard' or 'region', got {by!r}")
+
+    def lineage_counts(self) -> np.ndarray:
+        """Cumulative fleet-pooled lineage bank as a host
+        ``[n_stages, buckets]`` int64 array — the SLO evaluator's input
+        (one transfer, summed over shards)."""
+        return np.asarray(jax.device_get(self._lineage),
+                          np.int64).sum(axis=0)
+
+    def step_cost(self, state: FleetState, items: jnp.ndarray,
+                  ts: jnp.ndarray) -> dict:
+        """XLA cost analysis of ONE fleet tick at these operand shapes
+        (``obs.costmodel.analyze``): whole-executable FLOPs/bytes plus
+        the per-``named_scope``-stage breakdown (exchange hops, core
+        compute, commit...).  Lower + compile only — nothing executes —
+        and after warmup the compile hits jax's cache."""
+        offered = jnp.ones(jnp.asarray(ts).shape, bool)
+        return OC.analyze(
+            self._jstep, state, jnp.asarray(items), jnp.asarray(ts),
+            offered, jnp.zeros(self.cfg.num_shards, bool),
+            jnp.asarray(self._healthy), jnp.asarray(self._active),
+            jnp.asarray(self._budget, jnp.int32),
+            jnp.asarray(self._region_budget, jnp.int32),
+            self._lat_hist, self._lineage,
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32))
 
     # -- state ------------------------------------------------------------
     def init_state(self, feature_dim: int) -> FleetState:
@@ -491,8 +571,9 @@ class FleetExecutor:
             return jnp.tile(x[None], (E,) + (1,) * x.ndim)
 
         shard = StreamState(
-            rb=rbuf.create(cfg.capacity, (1 + feature_dim,)),
-            carry=jnp.zeros((cfg.carry_len, 1 + feature_dim), jnp.float32),
+            rb=rbuf.create(cfg.capacity, (META_COLS + feature_dim,)),
+            carry=jnp.zeros((cfg.carry_len, META_COLS + feature_dim),
+                            jnp.float32),
             carry_valid=jnp.zeros((cfg.carry_len,), bool),
             max_ts=jnp.asarray(jnp.finfo(jnp.float32).min),
             metrics=_zero_metrics(),
@@ -519,13 +600,23 @@ class FleetExecutor:
         """Number of fleet-step traces so far — 1 after warmup."""
         return self._traces
 
+    def _compile_count(self) -> int:
+        """Compiled fleet-step executables (>= trace_count: one trace
+        can compile twice — numpy-committed inputs on tick 0, sharded
+        device-resident donations from tick 1 on)."""
+        try:
+            return int(self._jstep._cache_size())
+        except Exception:             # non-pjit stand-ins in tests
+            return self._traces
+
     # -- the single-trace fleet tick ---------------------------------------
     def _fleet_step(self, state: FleetState, items: jnp.ndarray,
                     ts: jnp.ndarray, offered: jnp.ndarray,
                     replay: jnp.ndarray, healthy: jnp.ndarray,
                     active: jnp.ndarray, budget: jnp.ndarray,
-                    region_budget: jnp.ndarray
-                    ) -> tuple[FleetState, StepOutput]:
+                    region_budget: jnp.ndarray, lineage: jnp.ndarray,
+                    now: jnp.ndarray
+                    ) -> tuple[FleetState, StepOutput, jnp.ndarray]:
         cfg = self.cfg
         s = jax.tree.map(lambda x: x[0], state)        # this shard's block
         h = healthy[0]                                 # this shard's flag
@@ -533,6 +624,7 @@ class FleetExecutor:
         r = replay[0]                                  # backup-replay tick
         rb = region_budget[0]                          # this region's fog
         #                                                budget
+        lin = lineage[0]                               # [n_stages, buckets]
 
         # fleet watermark: min of per-shard maxima (as of the previous
         # step) over *healthy, active* shards — a lagging-but-healthy
@@ -563,7 +655,7 @@ class FleetExecutor:
         ing = ingest_and_window(cfg.stream, self.engine, s.shard,
                                 items[0], ts[0], watermark_ts=eff_wm,
                                 offer_mask=offered[0], excluded_ref=wm,
-                                replay=r)
+                                replay=r, now=now)
 
         # edge pipeline stages + rule gating, purely local; a departed
         # shard never escalates (membership masks the core exchange)
@@ -579,7 +671,7 @@ class FleetExecutor:
         # static shape ceilings (self._slots / self._fog_slots) are
         # baked into the trace
         with jax.named_scope("obs:exchange_core"):
-            core_out, core_feats, processed, stats = \
+            core_out, core_feats, processed, stats, taps = \
                 F.federate_escalations_tiered(
                     partial.outputs, core_live, self.pipeline.run_core,
                     region_axis=cfg.region_axis, edge_axis=cfg.axis_name,
@@ -589,10 +681,27 @@ class FleetExecutor:
                     core_budget=budget, edge_capacity=cfg.route_capacity,
                     cross_capacity=max(
                         1, -(-self._fog_slots // cfg.num_core)),
-                    core_slots=self._slots)
+                    core_slots=self._slots, birth=ing.w_birth)
         with jax.named_scope("obs:core_commit"):
             result = self.pipeline.commit_core(partial, core_live, core_out,
                                                core_feats, processed)
+
+        # event-time lineage: each stage's cross-tick residency, bucket-
+        # incremented into this shard's bank.  queueing/window/e2e come
+        # from this shard's rows; hop1 populates on fog columns (stamps
+        # received over the intra-region all-to-all), hop2 on region 0's
+        # core ranks (stamps that crossed the region axis) — the lineage
+        # lands where the latency is *experienced*, so pooling per
+        # region shows each tier's receive-side distribution
+        with jax.named_scope("obs:lineage"):
+            w_lat = now - ing.w_birth
+            lin = OL.lineage_update(lin, {
+                "queueing": (ing.q_lat, ing.q_mask),
+                "window": (w_lat, ing.emit),
+                "hop1": (now - taps.hop1_birth, taps.hop1_mask),
+                "hop2": (now - taps.hop2_birth, taps.hop2_mask),
+                "e2e": (w_lat, ing.emit),
+            })
 
         n_esc = jnp.sum(core_live.astype(jnp.int32))
         overflow = jnp.sum((core_live & ~processed).astype(jnp.int32))
@@ -625,7 +734,7 @@ class FleetExecutor:
         out = StepOutput(ing.aggregates, ing.features, ing.window_count,
                          ing.consequence, result.escalated, result.outputs)
         expand = lambda t: jax.tree.map(lambda x: x[None], t)  # noqa: E731
-        return expand(new_state), expand(out)
+        return expand(new_state), expand(out), lin[None]
 
     # -- public API ---------------------------------------------------------
     def step(self, state: FleetState, items: jnp.ndarray,
@@ -683,23 +792,35 @@ class FleetExecutor:
                     f"{self.cfg.stream.micro_batch} leaves replayed rows "
                     "queued past their lateness-exempt tick")
         self._step_num += 1
+        # warmup exclusion: the previous tick's wall time is the
+        # histogram feed — unless that tick compiled, in which case it
+        # measured compile+execute and would pollute the tail (the
+        # p99-vs-p95 cliff the BENCH baselines showed).  Feed 0.0
+        # instead (histogram_update skips non-positive) and count it
+        feed = 0.0 if self._skip_feed else self.last_step_seconds
+        if self._skip_feed and self.last_step_seconds > 0.0:
+            self.warmup_excluded += 1
+        compiles_before = self._compile_count()
         t0 = time.perf_counter()
         with self.tracer.step_annotation("fleet_tick", self._step_num):
             with self.tracer.span("fleet.dispatch", step=self._step_num):
-                out, self._lat_hist = self._jstep(
+                out, self._lat_hist, self._lineage = self._jstep(
                     state, items, ts, jnp.asarray(offered, bool),
                     jnp.asarray(replay, bool),
                     jnp.asarray(self._healthy),
                     jnp.asarray(self._active),
                     jnp.asarray(self._budget, jnp.int32),
                     jnp.asarray(self._region_budget, jnp.int32),
-                    self._lat_hist,
-                    jnp.asarray(self.last_step_seconds, jnp.float32))
+                    self._lat_hist, self._lineage,
+                    jnp.asarray(feed, jnp.float32),
+                    jnp.asarray(time.perf_counter() - self._t0,
+                                jnp.float32))
             if self.measure_steps:
                 with self.tracer.span("fleet.device_execute",
                                       step=self._step_num):
                     jax.block_until_ready(out)
         self.last_step_seconds = time.perf_counter() - t0
+        self._skip_feed = self._compile_count() > compiles_before
         return out
 
     # -- true re-mesh (the device set changed) ------------------------------
@@ -737,10 +858,12 @@ class FleetExecutor:
 
         Returns ``(new_state, departed)`` where ``departed`` maps each
         dropped old shard index to its *unconsumed* ring rows (host
-        ``[k, 1+D]`` array, ``ts`` in column 0) — the backup-replay
-        payload: route it to the backup's uplink (e.g.
-        ``FaultInjector.requeue``) so nothing the departed shard had
-        accepted is ever dropped.
+        ``[k, 2+D]`` array, ``ts`` in column 0, the ingest stamp in
+        column 1) — the backup-replay payload: route it to the backup's
+        uplink (e.g. ``FaultInjector.requeue``) so nothing the departed
+        shard had accepted is ever dropped.  Replayed rows get *fresh*
+        ingest stamps at redelivery, so the replay detour shows in the
+        EventLog, not the lineage.
 
         A re-mesh *renumbers* slots: old shard ``keep[j]`` is new slot
         ``j``.  Host-side bookkeeping addressed in the old numbering —
@@ -790,7 +913,7 @@ class FleetExecutor:
             head, tail = int(rb.head[i]), int(rb.tail[i])
             cap = rb.buf.shape[1]
             idx = (tail + np.arange(head - tail)) % cap
-            departed[i] = rb.buf[i][idx]           # [pending, 1+D] rows
+            departed[i] = rb.buf[i][idx]           # [pending, 2+D] rows
         fold_counters = fold_counters or {}
         if any(src not in departed_idx or dst not in kept
                for src, dst in fold_counters.items()):
@@ -804,7 +927,7 @@ class FleetExecutor:
                            host.late_excluded]):
                 arr[dst] += arr[src]
 
-        feature_dim = rb.buf.shape[-1] - 1
+        feature_dim = rb.buf.shape[-1] - META_COLS
         old_r = cfg.num_regions
         self.cfg = dataclasses.replace(
             cfg, num_shards=new_e, num_regions=new_r,
@@ -843,6 +966,15 @@ class FleetExecutor:
         # can place it on the new mesh
         self._lat_hist = jnp.asarray(np.asarray(jax.device_get(
             self._lat_hist)))
+        # the lineage banks are per-shard state: fold departed rows into
+        # their counter-fold survivor (histogram merge — totals survive
+        # the shrink), then renumber by keep (joiners start zeroed)
+        lin = np.array(np.asarray(jax.device_get(self._lineage)))
+        for src, dst in fold_counters.items():
+            lin[dst] = OL.histogram_merge(lin[dst], lin[src])
+        self._lineage = jnp.asarray(np.stack(
+            [lin[k] if k is not None else np.zeros_like(lin[0])
+             for k in keep]))
         self._remeshes += 1
         self._build()                          # one re-trace, next step
         spec = P((self.cfg.region_axis, self.cfg.axis_name))

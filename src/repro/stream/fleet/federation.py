@@ -250,6 +250,20 @@ def federate_escalations(records: jnp.ndarray, escalate: jnp.ndarray,
     return core_out, core_feats, processed, stats
 
 
+class LineageTaps(NamedTuple):
+    """Per-hop lineage measurement points of the tiered exchange (this
+    shard's view, inside the shard_map).  Stamps are the records'
+    ingest wall times (birth, seconds since the executor epoch); masks
+    select the buffer cells actually occupied.  ``hop1`` populates only
+    on fog columns (edge columns ``0..num_core-1``); ``hop2`` only on
+    region 0's core ranks.  Latency = the tick's ``now`` minus the
+    stamp — tick-quantized like every lineage stage."""
+    hop1_birth: jnp.ndarray        # [E * edge_capacity] f32 stamps
+    hop1_mask: jnp.ndarray         # [E * edge_capacity] bool occupancy
+    hop2_birth: jnp.ndarray        # [R * cross_capacity] f32 stamps
+    hop2_mask: jnp.ndarray         # [R * cross_capacity] bool occupancy
+
+
 class TieredStats(NamedTuple):
     """Per-step counters of the two-hop (edge -> fog -> cloud)
     escalation exchange (int32 scalars)."""
@@ -269,8 +283,8 @@ def federate_escalations_tiered(
         records: jnp.ndarray, escalate: jnp.ndarray, run_core: Callable, *,
         region_axis, edge_axis, num_regions: int, edges_per_region: int,
         num_core: int, region_budget, core_budget, edge_capacity: int,
-        cross_capacity: int, core_slots: int
-        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, TieredStats]:
+        cross_capacity: int, core_slots: int, birth: jnp.ndarray | None = None
+        ):
     """Two-hop escalation exchange over the ``(region, edge)`` mesh:
     fog pre-aggregation on the edge axis, then only region survivors
     cross the region axis to the core sub-mesh.
@@ -305,11 +319,28 @@ def federate_escalations_tiered(
     and ``core_slots`` are the static shape ceilings.  Any budget
     values within the ceilings run on the same trace.
 
+    ``birth``: optional [N] f32 ingest stamps (lineage).  When given,
+    the stamp rides the wire as one extra trailing record column (the
+    only wire-format change: zero extra collectives), ``run_core`` is
+    fed the *un*-widened records, and the return grows a fifth element
+    — :class:`LineageTaps` with the stamps + occupancy masks observed
+    at each hop's receive side.
+
     Returns ([N, R] core outputs, [N, F] core features, [N] bool
-    processed, :class:`TieredStats`).
+    processed, :class:`TieredStats`[, :class:`LineageTaps`]).
     """
     ee, rr = edges_per_region, num_regions
     n, r = records.shape
+    if birth is not None:
+        # the stamp is wire metadata, not a record column: widen the
+        # wire rows, strip before the core fn so its input width (and
+        # therefore its output shapes) are unchanged
+        records = jnp.concatenate(
+            [records, jnp.asarray(birth, records.dtype)[:, None]], axis=1)
+        core_fn = lambda b: run_core(b[:, :r])          # noqa: E731
+    else:
+        core_fn = run_core
+    rw = records.shape[1]                               # wire row width
     region_budget = jnp.asarray(region_budget, jnp.int32)
     core_budget = jnp.asarray(core_budget, jnp.int32)
     esc = escalate.astype(bool)
@@ -361,15 +392,15 @@ def federate_escalations_tiered(
         plan2 = RT.make_plan(jnp.where(occ_flat, 0, 1).astype(jnp.int32),
                              2, cross_capacity)
         compact = RT.scatter_to_buckets(
-            recv1.reshape(ee * edge_capacity, r), plan2, 2,
-            cross_capacity)[0]                         # [cap2, R]
+            recv1.reshape(ee * edge_capacity, rw), plan2, 2,
+            cross_capacity)[0]                         # [cap2, RW]
 
     # hop 2: one cross-region all-to-all; only chunk 0 (to the cloud
     # region) carries payload — the buffer is budget-sized, not E-sized
     with jax.named_scope("obs:all_to_all_region"):
-        send2 = jnp.zeros((rr, cross_capacity, r),
+        send2 = jnp.zeros((rr, cross_capacity, rw),
                           records.dtype).at[0].set(compact)
-        recv2 = RT.all_to_all_route(send2, region_axis)  # [R, cap2, R]
+        recv2 = RT.all_to_all_route(send2, region_axis)  # [R, cap2, RW]
 
     # cloud-side validity + fleet core budget: the same receive-slot
     # arithmetic one tier up — per-region survivor totals play the
@@ -383,7 +414,7 @@ def federate_escalations_tiered(
     c_core = max(1, -(-core_slots // num_core))
     with jax.named_scope("obs:core_compute"):
         full_out, full_feats, done_mask = RT.compact_apply(
-            run_core, recv2.reshape(rr * cross_capacity, r),
+            core_fn, recv2.reshape(rr * cross_capacity, rw),
             under2.reshape(-1), c_core)
     f = full_feats.shape[1]
     done = done_mask.astype(records.dtype)
@@ -416,7 +447,15 @@ def federate_escalations_tiered(
         fleet_escalations=fleet_surv,
         fleet_overflow=jnp.maximum(0, fleet_surv - core_budget),
     )
-    return core_out, core_feats, processed, stats
+    if birth is None:
+        return core_out, core_feats, processed, stats
+    taps = LineageTaps(
+        hop1_birth=recv1.reshape(ee * edge_capacity, rw)[:, -1],
+        hop1_mask=occ1.reshape(-1),
+        hop2_birth=recv2.reshape(rr * cross_capacity, rw)[:, -1],
+        hop2_mask=occ2.reshape(-1),
+    )
+    return core_out, core_feats, processed, stats, taps
 
 
 def allreduce_metrics(metrics, axis_name):

@@ -78,7 +78,7 @@ def test_event_schema_golden():
         "budget_resize", "health_change", "leave", "join",
         "backup_assign", "remesh", "stall_buffer", "replay_queue",
         "replay_delivery", "backlog_drain", "slot_drain", "requeue",
-        "fog_budget_resize"})
+        "fog_budget_resize", "slo_breach", "slo_recover"})
     assert ENVELOPE_FIELDS == ("seq", "wall_time", "tick", "kind",
                                "shard", "cause")
 
@@ -255,8 +255,11 @@ def test_stream_executor_obs(rng):
         jax.block_until_ready(out)
     assert ex.trace_count == 1, ex.trace_count
     lat = ex.latency_percentiles()
-    # first step feeds dt=0 (skipped: missing measurement, not fast)
-    assert lat["count"] == steps - 1
+    # first step feeds dt=0 (skipped: missing measurement, not fast);
+    # the second withholds the traced (compile-polluted) step's wall
+    # time — warmup_excluded accounts for it
+    assert lat["count"] == steps - 2
+    assert lat["warmup_excluded"] == 1
     assert lat["p99_us"] >= lat["p50_us"] > 0
     assert tr.stage_percentiles()["stream.dispatch"]["count"] == steps
 

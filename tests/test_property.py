@@ -318,3 +318,45 @@ def test_tiered_watermark_ref_property(seed, r, e):
     ts2[i, j] += abs(rng.normal(0, 50))
     fleet2, region2 = tiered_watermark_ref(ts2, h, a)
     assert fleet2 >= fleet and (region2 >= region).all()
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lineage_percentiles_monotone_property(seed):
+    """p50 <= p95 <= p99 on arbitrary lineage banks (incl. empty
+    stages), in every pooled view."""
+    from repro.obs import latency as OL
+
+    rng = np.random.default_rng(seed)
+    bank = rng.integers(0, 500, (4, len(OL.LINEAGE_STAGES),
+                                 len(OL.DEFAULT_EDGES) + 1)).astype(np.int64)
+    bank[:, rng.integers(len(OL.LINEAGE_STAGES))] = 0
+    for p in OL.lineage_percentiles(bank).values():
+        assert p["p50_us"] <= p["p95_us"] <= p["p99_us"]
+        if p["count"] == 0:
+            assert p["p99_us"] == 0.0
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       shards=st.integers(2, 8))
+def test_lineage_merge_pooling_property(seed, shards):
+    """Histogram merge is associative and commutative, and pooling
+    per-shard banks equals one fleet-wide histogram — what makes the
+    per-shard / per-region / pooled lineage views consistent."""
+    from repro.obs import latency as OL
+
+    rng = np.random.default_rng(seed)
+    banks = rng.integers(0, 300, (shards, len(OL.LINEAGE_STAGES),
+                                  len(OL.DEFAULT_EDGES) + 1)).astype(np.int64)
+    a, b, c = banks[0], banks[1], banks[-1]
+    np.testing.assert_array_equal(OL.histogram_merge(a, b),
+                                  OL.histogram_merge(b, a))
+    np.testing.assert_array_equal(
+        OL.histogram_merge(OL.histogram_merge(a, b), c),
+        OL.histogram_merge(a, OL.histogram_merge(b, c)))
+    pooled = banks[0]
+    for s in banks[1:]:
+        pooled = OL.histogram_merge(pooled, s)
+    np.testing.assert_array_equal(pooled, banks.sum(axis=0))
+    assert OL.lineage_percentiles(banks) == OL.lineage_percentiles(pooled)
