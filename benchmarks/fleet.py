@@ -8,7 +8,9 @@ fleet tick is one XLA executable).  Emits the same CSV row schema as
 ``benchmarks/streaming.py``, including the event-time lineage rows
 (per-stage ``fleet/E*_lat_*`` percentiles), the warmup-excluded device
 step histogram, and the ``fleet/E*_cost`` roofline coordinates from
-``obs.costmodel``.
+``obs.costmodel``; a ``fused=1`` lane re-runs the widest shape with
+the per-shard fused-tick kernel (``fleet/E8_fused_*`` rows, counters
+asserted equal to the staged lane's).
 
 ``--faults`` runs the degraded-fleet smoke instead: a
 ``FleetController`` drives the elastic core budget and the
@@ -130,12 +132,15 @@ def _child():
         items_s = e * BATCH / np.median(lat)
         assert ex.trace_count == 1, f"retraced: {ex.trace_count}"
         row(f"fleet/E{e}_step", float(np.median(lat) * 1e6),
-            f"items_per_s={items_s:.0f}")
+            f"items_per_s={items_s:.0f};fused=0")
         row(f"fleet/E{e}_p99", float(np.percentile(lat, 99) * 1e6),
             f"esc={m['fleet']['windows_escalated']}"
             f"/{m['fleet']['windows_emitted']}"
             f";overflow={m['fleet_core_overflow']}"
             f";traces={ex.trace_count}")
+        if e == SHARD_COUNTS[-1]:
+            staged_fleet_counters = (m["fleet"]["windows_escalated"],
+                                     m["fleet"]["windows_emitted"])
         # the in-step device histogram's view of the same run (warmup/
         # compile ticks are EXCLUDED — warmup_excluded counts them — so
         # its tail tracks steady-state, not the one compile)
@@ -168,6 +173,58 @@ def _child():
             f";gflops={rl['gflops']:.4f};gbs={rl['gbs']:.4f}"
             f";ai={rl['ai']:.4f};flops_util={rl['flops_util']:.6f}"
             f";bw_util={rl['bw_util']:.6f}")
+
+    # fused tick lane: the widest shape again with every shard's ingest
+    # running the fused window+features+rules kernel
+    # (StreamConfig(fused=True) — the per-shard path inside the same
+    # shard_map step).  Counters must come out bitwise the staged
+    # lane's (parity is pinned record-level in tests; the fleet-level
+    # escalation totals are re-asserted here so the bench itself would
+    # catch a divergence), so only throughput/latency re-report.
+    e = SHARD_COUNTS[-1]
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot_mean", 0, ">=", 0.25,
+                             rules.C_SEND_CORE, priority=1),
+        rules.threshold_rule("sparse", 4, "<", 8.0,
+                             rules.C_STORE_EDGE, priority=2),
+    ])
+    p = pipe.two_tier_pipeline(edge_fn, core_fn, engine,
+                               core_params=core_p)
+    fcfg = StreamConfig(micro_batch=BATCH, window=64, stride=32,
+                        capacity=4 * BATCH, lateness=64.0, fused=True)
+    cfg = FleetConfig(stream=fcfg, num_shards=e,
+                      num_core=max(1, e // 4), core_budget=2 * e)
+    ex = FleetExecutor(cfg, engine, p)
+    state = ex.init_state(D)
+    rng = np.random.default_rng(7)
+    lat, t0 = [], 0.0
+    for i in range(WARMUP + STEPS):
+        base = rng.standard_normal((e, BATCH, D)).astype(np.float32)
+        if (i // 20) % 2:
+            base[:, :, 0] += 0.5
+        items = jnp.asarray(base)
+        ts = jnp.asarray(
+            np.tile(t0 + np.arange(BATCH, dtype=np.float32), (e, 1)))
+        t0 += BATCH
+        t = time.perf_counter()
+        state, out = ex.step(state, items, ts)
+        jax.block_until_ready(out)
+        if i >= WARMUP:
+            lat.append(time.perf_counter() - t)
+    lat = np.asarray(lat)
+    m = state.metrics.as_dict()
+    fused_counters = (m["fleet"]["windows_escalated"],
+                      m["fleet"]["windows_emitted"])
+    assert fused_counters == staged_fleet_counters, \
+        (fused_counters, staged_fleet_counters)
+    assert ex.trace_count == 1, f"retraced: {ex.trace_count}"
+    row(f"fleet/E{e}_fused_step", float(np.median(lat) * 1e6),
+        f"items_per_s={e * BATCH / np.median(lat):.0f};fused=1")
+    row(f"fleet/E{e}_fused_p99", float(np.percentile(lat, 99) * 1e6),
+        f"esc={m['fleet']['windows_escalated']}"
+        f"/{m['fleet']['windows_emitted']}"
+        f";overflow={m['fleet_core_overflow']}"
+        f";traces={ex.trace_count};fused=1")
 
 
 def _hot_fixture():

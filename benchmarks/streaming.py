@@ -38,13 +38,15 @@ def _core_fn(p, batch):
     return h, batch[:, :5]
 
 
-def _executor(backend: str) -> tuple[StreamExecutor, object]:
+def _executor(backend: str, fused: bool = False,
+              overlap: bool = False) -> tuple[StreamExecutor, object]:
     # interpret everywhere the TPU kernel can't compile; only on TPU do
     # the pallas rows measure the real kernel
     interpret = backend == "pallas" and jax.default_backend() != "tpu"
     cfg = StreamConfig(micro_batch=BATCH, window=64, stride=32,
                        capacity=4 * BATCH, lateness=64.0, backend=backend,
-                       interpret=interpret)
+                       interpret=interpret, fused=fused,
+                       overlap_ingest=overlap)
     engine = rules.RuleEngine([
         rules.threshold_rule("hot_mean", 0, ">=", 0.25, rules.C_SEND_CORE,
                              priority=1),
@@ -79,18 +81,40 @@ def _drive(ex, state, steps):
 
 def bench():
     for backend in ("jnp", "pallas"):
-        ex, state = _executor(backend)
+      for fused in (False, True):
+        ex, state = _executor(backend, fused=fused)
         state, _ = _drive(ex, state, WARMUP)
         state, lat = _drive(ex, state, STEPS)
         m = state.metrics.as_dict()        # one host pull for all counters
         items_s = BATCH / np.median(lat)
         p99 = float(np.percentile(lat, 99) * 1e6)
         assert ex.trace_count == 1, f"retraced: {ex.trace_count}"
-        row(f"streaming/{backend}_step", float(np.median(lat) * 1e6),
-            f"items_per_s={items_s:.0f}")
-        row(f"streaming/{backend}_p99", p99,
+        tag = f"{backend}_fused" if fused else backend
+        row(f"streaming/{tag}_step", float(np.median(lat) * 1e6),
+            f"items_per_s={items_s:.0f};fused={int(fused)}")
+        row(f"streaming/{tag}_p99", p99,
             f"esc={m['windows_escalated']}/{m['windows_emitted']}"
-            f";traces={ex.trace_count}")
+            f";traces={ex.trace_count};fused={int(fused)}")
+        if fused:
+            # the fused lane re-reports only throughput/latency + the
+            # one-tick cost (named-scope sub-attribution rides the
+            # obs:fused_tick scope) — the staged lane below keeps the
+            # full hist/lineage rows, and parity tests pin that the
+            # two lanes' counters are bitwise identical anyway
+            rng = np.random.default_rng(7)
+            cost = ex.step_cost(state,
+                                rng.standard_normal((BATCH, D)).astype(
+                                    np.float32),
+                                np.arange(BATCH, dtype=np.float32))
+            rl = CM.roofline(cost["flops"], cost["bytes_accessed"],
+                             float(np.median(lat)))
+            row(f"streaming/{tag}_cost", float(np.median(lat) * 1e6),
+                f"flops={cost['flops']:.0f}"
+                f";bytes={cost['bytes_accessed']:.0f}"
+                f";gflops={rl['gflops']:.4f};gbs={rl['gbs']:.4f}"
+                f";ai={rl['ai']:.4f};flops_util={rl['flops_util']:.6f}"
+                f";bw_util={rl['bw_util']:.6f};fused=1")
+            continue
         # the in-step device histogram's view of the same run (warmup/
         # compile ticks are EXCLUDED — warmup_excluded counts them — so
         # its tail tracks steady-state, not the one compile)
@@ -122,7 +146,53 @@ def bench():
             f";bytes={cost['bytes_accessed']:.0f}"
             f";gflops={rl['gflops']:.4f};gbs={rl['gbs']:.4f}"
             f";ai={rl['ai']:.4f};flops_util={rl['flops_util']:.6f}"
-            f";bw_util={rl['bw_util']:.6f}")
+            f";bw_util={rl['bw_util']:.6f};fused=0")
+    _bench_overlap()
+
+
+def _batches(steps: int) -> list:
+    """The _drive feed as a materialized producer list for run()."""
+    rng = np.random.default_rng(7)
+    out, t0 = [], 0.0
+    for i in range(steps):
+        base = rng.standard_normal((BATCH, D)).astype(np.float32)
+        if (i // 20) % 2:
+            base[:, 0] += 0.5
+        out.append((jnp.asarray(base),
+                    jnp.asarray(t0 + np.arange(BATCH), jnp.float32)))
+        t0 += BATCH
+    return out
+
+
+def _bench_overlap():
+    """Host/device ingest overlap on the fused jnp lane: wall time of
+    ``StreamExecutor.run`` draining the same producer with the
+    ``IngestStager`` on vs the direct loop.  Overlap changes delivery
+    timing only — outputs stay bitwise (pinned in tests), so the only
+    interesting column is the clock."""
+    steps = 100
+    batches = _batches(WARMUP + steps)
+
+    def timed_run(overlap: bool):
+        ex, state = _executor("jnp", fused=True, overlap=overlap)
+        state, outs = ex.run(state, batches[:WARMUP])   # compile tick
+        jax.block_until_ready(outs[-1])
+        t = time.perf_counter()
+        state, outs = ex.run(state, batches[WARMUP:])
+        jax.block_until_ready(outs[-1])
+        wall = time.perf_counter() - t
+        assert ex.trace_count == 1, f"retraced: {ex.trace_count}"
+        return wall, len(outs), state
+
+    direct_s, n_direct, _ = timed_run(False)
+    overlap_s, n_overlap, _ = timed_run(True)
+    # the stager holds one batch back during the run and flushes it at
+    # the end, so both lanes deliver every batch
+    assert n_direct == n_overlap == steps, (n_direct, n_overlap)
+    row("streaming/overlap_run", overlap_s / steps * 1e6,
+        f"items_per_s={steps * BATCH / overlap_s:.0f}"
+        f";direct_us={direct_s / steps * 1e6:.1f}"
+        f";fused=1;overlap=1")
 
 
 if __name__ == "__main__":

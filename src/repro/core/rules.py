@@ -31,12 +31,21 @@ CONSEQUENCE_NAMES = ["none", "store_edge", "send_core", "trigger_topology",
 
 @dataclasses.dataclass(frozen=True)
 class Rule:
-    """IF ``condition(features) -> bool[...]`` THEN ``consequence``."""
+    """IF ``condition(features) -> bool[...]`` THEN ``consequence``.
+
+    ``feature_idx``/``op``/``value`` are the optional *tabular* form of
+    the condition (set by :func:`threshold_rule`): a scalar-comparison
+    triple a fused kernel can apply inline without calling back into
+    the closure.  ``None`` for arbitrary-callable rules.
+    """
     name: str
     condition: Callable[[jnp.ndarray], jnp.ndarray]
     consequence: int
     priority: int = 0
     payload: str | None = None     # e.g. function-profile name to trigger
+    feature_idx: int | None = None
+    op: str | None = None
+    value: float | None = None
 
 
 class RuleEngine:
@@ -72,6 +81,24 @@ class RuleEngine:
     def __call__(self, features: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         return self.evaluate(features)
 
+    def table(self) -> tuple[tuple[int, str, float, int], ...] | None:
+        """The engine as a static comparison table, or ``None``.
+
+        Returns ``((feature_idx, op, value, consequence), ...)`` in
+        *application* order — lowest precedence first, so applying the
+        rows sequentially with "condition overwrites" reproduces
+        :meth:`evaluate`'s conflict-set resolution exactly.  ``None``
+        when any rule is a non-tabular callable (the fused tick path
+        then refuses and the caller stays on the staged path).
+        """
+        if any(r.feature_idx is None or r.op is None or r.value is None
+               for r in self.rules):
+            return None
+        return tuple(
+            (self.rules[i].feature_idx, self.rules[i].op,
+             float(self.rules[i].value), self.rules[i].consequence)
+            for i in reversed(self._order))
+
 
 def threshold_rule(name: str, feature_idx: int, op: str, value: float,
                    consequence: int, priority: int = 0,
@@ -86,7 +113,8 @@ def threshold_rule(name: str, feature_idx: int, op: str, value: float,
     }
     if op not in ops:
         raise ValueError(f"unknown op {op!r}")
-    return Rule(name, ops[op], consequence, priority, payload)
+    return Rule(name, ops[op], consequence, priority, payload,
+                feature_idx=feature_idx, op=op, value=value)
 
 
 def deadline_rule(name: str, latency_idx: int, budget: float,

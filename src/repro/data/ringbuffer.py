@@ -19,6 +19,14 @@ timestamp, column 1 the ingest wall-time stamp the latency lineage
 reads at dequeue (queueing delay = dequeue ``now`` minus column 1), the
 rest the feature payload.  Residency in this ring IS the queueing stage
 of the end-to-end latency lineage.
+
+Both executor tick paths share these exact ops: the fused hot path
+(``StreamConfig(fused=True)``, ``kernels/fused_tick``) fuses the
+window/feature/rule compute downstream of ``dequeue`` but keeps the
+masked-compaction enqueue and FIFO dequeue here verbatim — ring state
+(buf contents, head, tail) is bit-identical whichever path consumes
+it, which is what lets a fused and a staged executor checkpoint-swap
+mid-stream.
 """
 from __future__ import annotations
 

@@ -1,0 +1,2 @@
+from repro.kernels.fused_tick.ops import fused_tick  # noqa: F401
+from repro.kernels.fused_tick.ref import fused_tick_ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""Jit'd wrapper for the fused_tick kernel: framing, stride, padding.
+
+The kernel is a dense stride-1 pass; this wrapper provides the
+executor's whole window/features/rules contract on top of it:
+
+* input is the executor's carry-continuous ring-row block ``seq``
+  (``[T, meta_cols + D]`` rows of ``ts | ingest_wall | features``) —
+  column 0 past the event timestamp (the ingest wall stamp) rides the
+  same sweep as the data, so the lineage birth ``min`` costs no extra
+  framing,
+* rows are padded *invalid* and lanes to the 128-lane tile (padding
+  contributes reduction identities, never results),
+* stride > 1 is a row slice of the stride-1 result,
+* the complete-windows-only framing (``partial=False``) matches the
+  executor: ``NW = (T - window)//stride + 1``.
+
+``backend="jnp"`` is the traced oracle: ONE shared framing of the same
+block with the identical sequential accumulation order and the same
+``rule_sweep``, so staged / fused-jnp / fused-pallas all agree
+bit-for-bit.  (The staged executor path reduces in this order too —
+that three-framings-vs-one difference is exactly the bandwidth the
+fused path saves.)
+
+Returns ``(agg [NW, D] mean aggregate, wcount [NW] int32, feats
+[NW, 5] rule features, w_birth [NW] oldest ingest stamp, cons [NW]
+int32 emit-masked consequences)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_tick.fused_tick import (BLOCK_ROWS, F32_MAX,
+                                                 F32_MIN, LANES,
+                                                 fused_reduce_2d, rule_sweep)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "stride", "table", "min_count",
+                                    "meta_cols", "backend", "interpret"))
+def fused_tick(seq: jnp.ndarray, seq_valid: jnp.ndarray, window: int,
+               stride: int, *, table, min_count: int = 1,
+               meta_cols: int = 2, backend: str = "jnp",
+               interpret: bool = False):
+    """Fused window + features + rules over one ring-row block."""
+    if table is None:
+        raise ValueError(
+            "fused tick needs a tabular RuleEngine (threshold_rule-style "
+            "rules only): RuleEngine.table() returned None — use the "
+            "staged path (StreamConfig(fused=False)) for callable rules")
+    if not (0 < stride <= window):
+        raise ValueError(f"need 0 < stride <= window, got {stride}, {window}")
+    table = tuple(tuple(r) for r in table)
+    t = seq.shape[0]
+    d = seq.shape[1] - meta_cols
+    sc = meta_cols - 1                          # signal column within x
+    nw = (t - window) // stride + 1             # complete windows only
+    if nw < 1:
+        raise ValueError(f"need t >= window, got {t} < {window}")
+    # all-column block past the event timestamp: [wall | features]
+    x = seq[:, 1:].astype(jnp.float32)
+    seq_valid = seq_valid.astype(bool)
+
+    if backend == "pallas":
+        # rows: cover the last window's reach, then round the stride-1
+        # output row count up to the sublane tile; lanes up to the
+        # 128-lane tile.  Padding rows are *invalid* — the kernel's
+        # in-VMEM mask select turns them into reduction identities.
+        reach = (nw - 1) * stride + window
+        base = max(t, reach)
+        rows = base + (-(base - window + 1)) % BLOCK_ROWS
+        pad_lanes = (-x.shape[1]) % LANES
+        xp = jnp.pad(x, ((0, rows - t), (0, pad_lanes)))
+        vp = jnp.pad(seq_valid, (0, rows - t))
+        s, mx, mn, c, r = (o[::stride][:nw] for o in fused_reduce_2d(
+            xp, vp, window, table, min_count, interpret=interpret))
+        count = c[:, 0]
+        cf = jnp.maximum(count, 1.0)
+        agg = s[:, sc:sc + d] / cf[:, None]
+        feats = jnp.stack([s[:, sc] / cf, mx[:, sc], mn[:, sc], s[:, sc],
+                           count], axis=1)
+        return (agg, count.astype(jnp.int32), feats, mn[:, 0],
+                r[:, sc].astype(jnp.int32))
+
+    # jnp oracle: ONE framing of the same block, same sequential order
+    from repro.stream.windows import _frame, _seq_combine
+    vals, mask = _frame(x, seq_valid, window, stride, partial=False)
+    m = mask[:, :, None]
+    s = _seq_combine(jnp.where(m, vals, 0.0), jnp.add)
+    mx = _seq_combine(jnp.where(m, vals, F32_MIN), jnp.maximum)
+    mn = _seq_combine(jnp.where(m, vals, F32_MAX), jnp.minimum)
+    count = jnp.sum(mask, axis=1).astype(jnp.float32)
+    nonempty = (count > 0)[:, None]
+    mx = jnp.where(nonempty, mx, 0.0)
+    mn = jnp.where(nonempty, mn, 0.0)
+    cf = jnp.maximum(count, 1.0)
+    agg = s[:, sc:sc + d] / cf[:, None]
+    feats = jnp.stack([s[:, sc] / cf, mx[:, sc], mn[:, sc], s[:, sc],
+                       count], axis=1)
+    cons = rule_sweep(s[:, sc], mx[:, sc], mn[:, sc], count, table,
+                      min_count)
+    return (agg, count.astype(jnp.int32), feats, mn[:, 0],
+            cons.astype(jnp.int32))

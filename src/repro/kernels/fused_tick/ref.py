@@ -1,0 +1,69 @@
+"""Pure-numpy oracle for the fused_tick kernel.
+
+Mirrors the kernel *operation for operation* — float32 accumulators,
+one identity-masked contribution per window slot in left-to-right
+order, the same elementwise rule sweep — so the parity tests can
+assert bit-for-bit equality, not closeness.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+F32_MIN = np.float32(np.finfo(np.float32).min)
+F32_MAX = np.float32(np.finfo(np.float32).max)
+
+_CMP = {
+    ">=": lambda f, v: f >= v,
+    ">":  lambda f, v: f > v,
+    "<=": lambda f, v: f <= v,
+    "<":  lambda f, v: f < v,
+    "==": lambda f, v: f == v,
+}
+
+
+def fused_tick_ref(seq: np.ndarray, seq_valid: np.ndarray, window: int,
+                   stride: int, table, min_count: int = 1,
+                   meta_cols: int = 2):
+    """Fused window + features + rules, complete windows only.
+
+    seq: [T, meta_cols + D] ring rows; seq_valid: [T] bool.  Returns
+    (agg [NW, D], wcount [NW] int32, feats [NW, 5], w_birth [NW],
+    cons [NW] int32) — the ``ops.fused_tick`` contract.
+    """
+    x = np.asarray(seq, np.float32)[:, 1:]      # [wall | features]
+    v = np.asarray(seq_valid, bool)
+    t, l = x.shape
+    sc = meta_cols - 1                          # signal column within x
+    d = l - sc
+    nw = (t - window) // stride + 1
+    agg = np.zeros((nw, d), np.float32)
+    feats = np.zeros((nw, 5), np.float32)
+    wcount = np.zeros((nw,), np.int32)
+    w_birth = np.zeros((nw,), np.float32)
+    cons = np.zeros((nw,), np.int32)
+    for i in range(nw):
+        acc_s = np.zeros((l,), np.float32)
+        acc_mx = np.full((l,), F32_MIN, np.float32)
+        acc_mn = np.full((l,), F32_MAX, np.float32)
+        c = np.float32(0)
+        for w in range(window):
+            row, m = x[i * stride + w], v[i * stride + w]
+            acc_s = acc_s + np.where(m, row, np.float32(0))
+            acc_mx = np.maximum(acc_mx, np.where(m, row, F32_MIN))
+            acc_mn = np.minimum(acc_mn, np.where(m, row, F32_MAX))
+            c = c + np.float32(m)
+        if c == 0:
+            acc_mx = np.zeros_like(acc_mx)
+            acc_mn = np.zeros_like(acc_mn)
+        cf = np.maximum(c, np.float32(1))
+        agg[i] = acc_s[sc:sc + d] / cf
+        feats[i] = [acc_s[sc] / cf, acc_mx[sc], acc_mn[sc], acc_s[sc], c]
+        wcount[i] = int(c)
+        w_birth[i] = acc_mn[0]
+        code = np.float32(0)
+        for fi, op, value, cq in table:          # lowest precedence first
+            f = (acc_s[sc] / cf, acc_mx[sc], acc_mn[sc], acc_s[sc], c)[fi]
+            if _CMP[op](f, np.float32(value)):
+                code = np.float32(cq)
+        cons[i] = int(code) if c >= min_count else 0
+    return agg, wcount, feats, w_birth, cons

@@ -6,5 +6,5 @@ from repro.runtime.compression import (cross_pod_allreduce, compress_tree,  # no
 from repro.runtime.elastic import (ElasticBudget, rebuild_overlay,  # noqa: F401
                                    remesh, reshard_state)
 from repro.runtime.health import HealthMonitor  # noqa: F401
-from repro.runtime.overlap import microbatched_grads  # noqa: F401
+from repro.runtime.overlap import IngestStager, microbatched_grads  # noqa: F401
 from repro.runtime.straggler import StragglerDetector  # noqa: F401

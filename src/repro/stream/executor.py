@@ -58,6 +58,9 @@ class StreamConfig:
     min_count: int = 1             # valid samples for a window to fire
     backend: str = "jnp"           # "jnp" | "pallas" window reduction
     interpret: bool = False        # Pallas interpret mode (CPU tests)
+    fused: bool = False            # fused window+features+rules tick
+    overlap_ingest: bool = False   # stage tick N+1 during tick N (run())
+    ingest_int8: bool = False      # int8-quantize staged telemetry (lossy)
 
     def __post_init__(self):
         if not (0 < self.stride <= self.window):
@@ -67,6 +70,9 @@ class StreamConfig:
                              f"stride, got {self}")
         if self.capacity < self.micro_batch:
             raise ValueError("capacity must hold one micro-batch")
+        if self.ingest_int8 and not self.overlap_ingest:
+            raise ValueError("ingest_int8 rides the overlapped ingest "
+                             "stager: set overlap_ingest=True too")
 
     @property
     def windows_per_step(self) -> int:
@@ -263,29 +269,48 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
                        .astype(jnp.int32))
 
     # cross-batch continuity: prepend the carried W-S samples
-    with jax.named_scope("obs:window"):
-        seq = jnp.concatenate([state.carry, rows], axis=0)
-        seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
-        sig = seq[:, META_COLS:]
-        agg, wcount = W.sliding_window(
-            sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
-            backend=cfg.backend, partial=False, interpret=cfg.interpret)
-        feats, _ = W.window_features(sig, seq_valid, cfg.window, cfg.stride,
-                                     partial=False)
-    with jax.named_scope("obs:lineage"):
-        # lineage taps: per-row queueing delay + per-window birth stamp
-        # (oldest valid sample — the min reducer rides the same window
-        # framing as the aggregate, one metadata column instead of D)
-        q_lat = now - rows[:, 1]
-        w_birth, _ = W.sliding_window(
-            seq[:, 1:2], seq_valid, cfg.window, cfg.stride, reducer="min",
-            backend="jnp", partial=False)
-        w_birth = w_birth[:, 0]
+    seq = jnp.concatenate([state.carry, rows], axis=0)
+    seq_valid = jnp.concatenate([state.carry_valid, valid], axis=0)
+    if cfg.fused:
+        # fused tick: window reduction + rule features + lineage birth
+        # + rule sweep in ONE pass over the block (the pallas backend
+        # keeps it VMEM-resident — one HBM round trip instead of three
+        # framings plus the rule ops; the jnp backend is the fused
+        # path's traced oracle).  Bit-for-bit equal to the staged
+        # scopes below — parity is pinned by tests/test_kernels.py and
+        # the executor-equivalence tests.
+        from repro.kernels.fused_tick import fused_tick as FT
+        with jax.named_scope("obs:fused_tick"):
+            agg, wcount, feats, w_birth, cons = FT(
+                seq, seq_valid, cfg.window, cfg.stride,
+                table=engine.table(), min_count=cfg.min_count,
+                meta_cols=META_COLS, backend=cfg.backend,
+                interpret=cfg.interpret)
+            q_lat = now - rows[:, 1]
+            emit = wcount >= cfg.min_count
+    else:
+        with jax.named_scope("obs:window"):
+            sig = seq[:, META_COLS:]
+            agg, wcount = W.sliding_window(
+                sig, seq_valid, cfg.window, cfg.stride, reducer="mean",
+                backend=cfg.backend, partial=False, interpret=cfg.interpret)
+            feats, _ = W.window_features(sig, seq_valid, cfg.window,
+                                         cfg.stride, partial=False)
+        with jax.named_scope("obs:lineage"):
+            # lineage taps: per-row queueing delay + per-window birth
+            # stamp (oldest valid sample — the min reducer rides the
+            # same window framing as the aggregate, one metadata column
+            # instead of D)
+            q_lat = now - rows[:, 1]
+            w_birth, _ = W.sliding_window(
+                seq[:, 1:2], seq_valid, cfg.window, cfg.stride,
+                reducer="min", backend="jnp", partial=False)
+            w_birth = w_birth[:, 0]
 
-    with jax.named_scope("obs:rules"):
-        emit = wcount >= cfg.min_count
-        _, cons = engine.evaluate(feats)
-        cons = jnp.where(emit, cons, R.C_NONE)
+        with jax.named_scope("obs:rules"):
+            emit = wcount >= cfg.min_count
+            _, cons = engine.evaluate(feats)
+            cons = jnp.where(emit, cons, R.C_NONE)
     record = jnp.concatenate([feats, agg], axis=1)         # [NW, 5 + D]
     return IngestResult(
         rb=rb,
@@ -338,6 +363,11 @@ class StreamExecutor:
 
     def __init__(self, cfg: StreamConfig, engine: R.RuleEngine,
                  pipeline: DataDrivenPipeline):
+        if cfg.fused and engine.table() is None:
+            raise ValueError(
+                "StreamConfig(fused=True) needs a tabular RuleEngine "
+                "(threshold_rule-style rules only) — callable rules "
+                "cannot run inside the fused kernel; use fused=False")
         self.cfg = cfg
         self.engine = engine
         self.pipeline = pipeline
@@ -539,9 +569,30 @@ class StreamExecutor:
     def run(self, state: StreamState,
             producer: Iterable[tuple[jnp.ndarray, jnp.ndarray]],
             ) -> tuple[StreamState, list[StepOutput]]:
-        """Drain a producer iterable of (items, ts) micro-batches."""
+        """Drain a producer iterable of (items, ts) micro-batches.
+
+        With ``cfg.overlap_ingest`` the host stages batch N+1 (H2D
+        transfer via ``runtime.overlap.IngestStager``, optionally
+        int8-quantized) while the device still computes batch N — the
+        classic ingest/compute overlap.  Staging changes delivery
+        *timing* only: with ``ingest_int8=False`` the outputs are
+        bitwise those of the direct loop (the staged path stays the
+        oracle); int8 staging is lossy and opt-in."""
         outs = []
+        if not self.cfg.overlap_ingest:
+            for items, ts in producer:
+                state, out = self.step(state, items, ts)
+                outs.append(out)
+            return state, outs
+        from repro.runtime.overlap import IngestStager
+        stager = IngestStager(int8=self.cfg.ingest_int8)
         for items, ts in producer:
-            state, out = self.step(state, items, ts)
+            staged = stager.stage(items, ts)
+            if staged is not None:
+                state, out = self.step(state, *staged)
+                outs.append(out)
+        staged = stager.flush()
+        if staged is not None:
+            state, out = self.step(state, *staged)
             outs.append(out)
         return state, outs

@@ -111,6 +111,7 @@ class FleetController:
     _prev_escalated: np.ndarray = None
     _prev_healthy: np.ndarray = None
     _slo_eval: SloEvaluator | None = None
+    _carry_stash: dict = None
     _resizes: int = 0
     _retraces: int = 0
     _ticks: int = 0
@@ -151,6 +152,8 @@ class FleetController:
             self._prev_escalated = np.zeros(e, np.int64)
         if self._prev_healthy is None:
             self._prev_healthy = np.ones(e, bool)
+        if self._carry_stash is None:
+            self._carry_stash = {}
         self.slos = tuple(self.slos)
         if self.slos and self._slo_eval is None:
             self._slo_eval = SloEvaluator(self.slos)
@@ -245,6 +248,76 @@ class FleetController:
                    cause="replacement joined; excluded until caught up",
                    active=[bool(x) for x in active])
 
+    # -- mid-ring carry handoff (sliding-window replay) --------------------
+    def begin_replay_carry(self, state: FleetState, stream: int,
+                           backup: int) -> FleetState:
+        """Migrate a departed ``stream``'s window carry onto its
+        ``backup``'s slot so batch-granular replay is exact for
+        *sliding* configs too (``stride < window``).
+
+        Tumbling replay needs no handoff — each tick's batch IS the
+        window.  A sliding config carries the last ``window - stride``
+        rows across ticks, so replaying the departed stream's batches
+        on the backup's slot would otherwise frame them against the
+        backup's OWN carry: silent window smear (which ``step`` used to
+        refuse outright).  This stashes the backup's carry host-side,
+        installs the departed stream's carry (and validity) in its
+        place, and blanks the departed slot's carry validity (the carry
+        *moves* — leaving it would emit the same partial windows twice).
+        At rejoin :meth:`end_replay_carry` moves the evolved carry back.
+
+        Call between ticks: after :meth:`leave` picked the backup,
+        before the first replay delivery.  Returns the updated state."""
+        key = (int(stream), int(backup))
+        if key[0] == key[1]:
+            raise ValueError(f"stream and backup must differ, got {key}")
+        if key in self._carry_stash:
+            raise ValueError(f"carry handoff already live for {key}")
+        carry, valid = jax.device_get(
+            (state.shard.carry[backup], state.shard.carry_valid[backup]))
+        self._carry_stash[key] = (np.asarray(carry), np.asarray(valid))
+        new_carry = state.shard.carry.at[backup].set(
+            state.shard.carry[stream])
+        new_valid = state.shard.carry_valid \
+            .at[backup].set(state.shard.carry_valid[stream]) \
+            .at[stream].set(False)
+        self._emit("backup_assign", shard=int(stream),
+                   cause="sliding carry handoff: departed stream's "
+                         "window carry installed on backup",
+                   backup=int(backup))
+        return state._replace(shard=state.shard._replace(
+            carry=new_carry, carry_valid=new_valid))
+
+    def end_replay_carry(self, state: FleetState, stream: int,
+                         backup: int) -> FleetState:
+        """Finish a :meth:`begin_replay_carry` handoff at rejoin: the
+        carry as evolved by the replayed batches moves from the backup
+        back to the stream's slot (the rejoined member continues the
+        stream's window sequence seamlessly — no dropped or doubled
+        sliding windows) and the backup's stashed own carry is
+        restored, so its paused stream resumes where it left off.
+
+        Call between ticks: after the last replay delivery, before the
+        rejoined slot's first fresh or drain tick.  Returns the updated
+        state."""
+        key = (int(stream), int(backup))
+        if key not in self._carry_stash:
+            raise ValueError(f"no live carry handoff for {key}; live: "
+                             f"{sorted(self._carry_stash)}")
+        carry, valid = self._carry_stash.pop(key)
+        new_carry = state.shard.carry \
+            .at[stream].set(state.shard.carry[backup]) \
+            .at[backup].set(carry)
+        new_valid = state.shard.carry_valid \
+            .at[stream].set(state.shard.carry_valid[backup]) \
+            .at[backup].set(valid)
+        self._emit("backup_assign", shard=int(stream),
+                   cause="sliding carry handoff: evolved carry returned "
+                         "to rejoined slot, backup's own carry restored",
+                   backup=int(backup))
+        return state._replace(shard=state.shard._replace(
+            carry=new_carry, carry_valid=new_valid))
+
     def remesh(self, state, devices: list, *, keep: list | None = None,
                num_core: int | None = None,
                num_regions: int | None = None):
@@ -255,13 +328,27 @@ class FleetController:
         unconsumed ring rows come back as the replay payload.  The
         controller's own per-rank state (detectors, escalation
         baselines, re-admission memory) is re-built for the new width;
-        detector history does not survive a re-mesh.  Slots are
-        *renumbered* (old shard ``keep[j]`` -> new slot ``j``): any
-        live ``FaultInjector`` schedule or ``backups`` plan addressed
-        in the old numbering must be drained or rebuilt — see
-        :meth:`FleetExecutor.remesh`."""
+        detector history does not survive a re-mesh.  Per-region fog
+        *policies* (and their hysteresis counters) DO survive an
+        edge-width resize — region identity is preserved there (see
+        :meth:`FleetExecutor.remesh`) — and restart only when the
+        region count changes.  Slots are *renumbered* (old shard
+        ``keep[j]`` -> new slot ``j``): translate a live
+        ``FaultInjector`` with ``FaultInjector.translate(keep, tick)``
+        (loud error on unmappable pending work, never silent loss) and
+        re-derive any ``backups`` plan in the new numbering.  A live
+        sliding-carry handoff must be closed first
+        (:meth:`end_replay_carry`) — its stash is addressed in the old
+        numbering, so remeshing through it raises."""
+        if self._carry_stash:
+            raise ValueError(
+                "re-mesh during a live replay carry handoff: call "
+                f"end_replay_carry for {sorted(self._carry_stash)} first "
+                "(slots renumber; the stashed carries are addressed in "
+                "the old numbering)")
         ex = self.executor
         old_e = ex.cfg.num_shards
+        old_r = ex.cfg.num_regions
         if keep is None:
             new_e = len(list(devices))
             keep = [i if i < old_e else None for i in range(new_e)]
@@ -300,10 +387,14 @@ class FleetController:
             self._prev_escalated[dst] += self._prev_escalated[src]
         self._prev_escalated = _remap(self._prev_escalated, 0)
         self._prev_healthy = _remap(self._prev_healthy, True)
-        # regions are re-formed by the renumbering: per-region fog
-        # policies restart (their hysteresis history is per region
-        # identity, which the remesh does not preserve)
-        if self.region_policies is not None:
+        # per-region fog policies carry their hysteresis state through
+        # an edge-width resize (region identity is preserved: region i
+        # is still region i) — restarting them here used to re-ramp the
+        # grow/shrink counters and fire spurious fog_budget_resize
+        # events right after every resize.  Only a region-COUNT change
+        # re-forms regions and restarts the policies.
+        if self.region_policies is not None \
+                and ex.cfg.num_regions != old_r:
             self.region_policies = self._default_region_policies()
         for name in ("wall_detector", "lag_detector"):
             d = getattr(self, name)
@@ -614,6 +705,73 @@ class FaultInjector:
                    cause="remesh payload re-queued for replay",
                    rows=int(len(rows)),
                    batches=len(range(0, len(rows), batch)))
+
+    def translate(self, keep: list, tick: int) -> None:
+        """Renumber this injector's bookkeeping through a re-mesh.
+
+        ``keep`` is the same mapping handed to
+        :meth:`FleetExecutor.remesh` (new slot ``j`` inherits old shard
+        ``keep[j]``); ``tick`` is the first tick that will run on the
+        new numbering.  Stall backlogs, replay queues, and the schedule
+        are rewritten in the new numbering, so a mid-schedule re-mesh
+        keeps injecting correctly instead of stalling/replaying the
+        wrong (renumbered) slots.
+
+        Loud failure over silent loss: an old shard that did NOT
+        survive (departed and not reassigned a new slot) must hold no
+        pending batches, no fault window still open at ``tick``, and no
+        churn arc with a leave or join still ahead — otherwise
+        ``ValueError``.  A genuinely dead stream's unconsumed rows
+        travel via :meth:`FleetExecutor.remesh`'s payload +
+        :meth:`requeue`, already addressed in the NEW numbering.
+        Empty queues and fully-elapsed schedule entries for unmapped
+        shards are dropped; :attr:`origin` resets (it described the old
+        numbering)."""
+        old_to_new = {k: j for j, k in enumerate(keep) if k is not None}
+
+        def _xlate(queues, what):
+            out = collections.defaultdict(collections.deque)
+            for s, q in queues.items():
+                if s in old_to_new:
+                    out[old_to_new[s]] = q
+                elif q:
+                    raise ValueError(
+                        f"re-mesh dropped shard {s} with {len(q)} pending "
+                        f"{what} batch(es) and no new slot — drain it or "
+                        f"requeue the remesh payload before translating")
+            return out
+
+        backlog = _xlate(self._backlog, "backlog")
+        replay = _xlate(self._replay, "replay")
+        faults, churn = [], []
+        for f in self.schedule.faults:
+            if f.shard in old_to_new:
+                faults.append(dataclasses.replace(
+                    f, shard=old_to_new[f.shard]))
+            elif f.end > tick:
+                raise ValueError(
+                    f"re-mesh dropped shard {f.shard} with an open or "
+                    f"future fault window ({f}, tick {tick}) and no new "
+                    f"slot")
+        for c in self.schedule.churn:
+            if c.shard in old_to_new:
+                churn.append(dataclasses.replace(
+                    c, shard=old_to_new[c.shard]))
+            elif c.leave >= tick or (c.join is not None and c.join > tick):
+                raise ValueError(
+                    f"re-mesh dropped shard {c.shard} with an open or "
+                    f"future churn arc ({c}, tick {tick}) and no new slot")
+        self._backlog, self._replay = backlog, replay
+        self.schedule = FaultSchedule(faults=faults, churn=churn)
+        for f in self.schedule.faults:
+            self._backlog[f.shard]          # re-materialize per-shard queues
+        for c in self.schedule.churn:
+            self._replay[c.shard]
+        self.origin = None
+        self._emit("remesh", tick,
+                   cause="injector schedule/queues translated through "
+                         "the re-mesh keep map",
+                   keep=[None if k is None else int(k) for k in keep])
 
     def inject(self, tick: int, items: np.ndarray, ts: np.ndarray,
                fresh: bool = True, backups: dict | None = None

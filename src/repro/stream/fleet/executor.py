@@ -291,6 +291,11 @@ class FleetExecutor:
         if ci is None or ci != len(pipeline.stages) - 1:
             raise ValueError("fleet pipeline needs exactly one core stage, "
                              "as the last stage")
+        if cfg.stream.fused and engine.table() is None:
+            raise ValueError(
+                "FleetConfig.stream has fused=True but the RuleEngine is "
+                "not tabular (threshold_rule-style rules only) — callable "
+                "rules cannot run inside the fused kernel; use fused=False")
         self.cfg = cfg
         self.engine = engine
         self.pipeline = pipeline
@@ -771,20 +776,17 @@ class FleetExecutor:
         if replay is None:
             replay = np.zeros(self.cfg.num_shards, bool)
         elif np.asarray(replay).any():
-            # batch-granular replay preconditions, enforced (silent
+            # batch-granular replay precondition, enforced (silent
             # window corruption otherwise, see README "Shard churn"):
-            # tumbling alignment — a sliding carry would smear the
-            # backup's own samples into the replayed stream's windows —
-            # and a per-tick-drained ring (N <= micro_batch; N is fixed
-            # by the trace, so replay rows can never linger in the ring
-            # past their lateness-exempt tick)
-            if self.cfg.stream.carry_len:
-                raise ValueError(
-                    "replay needs tumbling alignment (stride == window): "
-                    f"carry_len={self.cfg.stream.carry_len} would smear "
-                    "the backup's own samples into replayed windows "
-                    "(mid-ring replay for sliding carry is a ROADMAP "
-                    "follow-up)")
+            # a per-tick-drained ring (N <= micro_batch; N is fixed by
+            # the trace, so replay rows can never linger in the ring
+            # past their lateness-exempt tick).  Sliding-carry configs
+            # are legal too, PROVIDED the control plane performed the
+            # mid-ring carry handoff
+            # (``FleetController.begin_replay_carry`` /
+            # ``end_replay_carry``): the departed stream's window carry
+            # rides on the backup's slot for the replay ticks, so the
+            # backup's own samples never smear into replayed windows.
             if items.shape[1] > self.cfg.stream.micro_batch:
                 raise ValueError(
                     f"replay needs a per-tick-drained ring: offer size "
@@ -866,12 +868,25 @@ class FleetExecutor:
         EventLog, not the lineage.
 
         A re-mesh *renumbers* slots: old shard ``keep[j]`` is new slot
-        ``j``.  Host-side bookkeeping addressed in the old numbering —
-        a live ``FaultInjector``'s schedule/queues, a ``backups`` plan
-        — is invalid afterwards: drain it first (or seed a fresh
-        injector against the new topology with the returned payload via
-        ``requeue``).  Online slot translation for a mid-schedule
-        re-mesh is a ROADMAP follow-up."""
+        ``j``.  Host-side bookkeeping addressed in the old numbering
+        must be carried across: a live ``FaultInjector`` translates its
+        schedule and queues with ``FaultInjector.translate(keep, tick)``
+        (which errors loudly when a departed-and-unreassigned shard
+        still holds pending batches or open/future schedule windows —
+        never silent loss), and a ``backups`` plan must be re-derived
+        in the new numbering (e.g. a fresh ``FleetController.leave``).
+        Alternatively drain the injector first, or seed a fresh one
+        against the new topology with the returned payload via
+        ``requeue``.
+
+        Region *identity* survives an edge-width resize (the default
+        ``fixed_axis = region_axis`` path): region ``i`` is still
+        region ``i``, so per-region watermarks, fog budgets, and the
+        grown fog slot ceiling all carry over — the control plane's
+        hysteresis does not restart and no spurious
+        ``fog_budget_resize`` follows the resize.  A region-*count*
+        change re-forms regions, so that per-region state re-derives
+        from scratch."""
         cfg = self.cfg
         old_e = cfg.num_shards
         old_shape = {cfg.region_axis: cfg.num_regions,
@@ -940,22 +955,50 @@ class FleetExecutor:
                 [np.asarray(o[k]) if k is not None else np.asarray(f[j])
                  for j, k in enumerate(keep)]),
             host, fresh)
-        # regions are re-formed by the renumbering, so the per-region
-        # watermark restarts from scratch (it re-derives on the next
-        # tick; its monotone clamp is per region *identity*, which a
-        # remesh does not preserve).  The fleet reference keeps its
-        # migrated (replicated) value — fleet identity does persist
-        new_host = new_host._replace(region_watermark=np.full(
-            new_e, np.finfo(np.float32).min, np.float32))
-        # fog budgets re-derive for the new region set: the ceiling
-        # tracks the new config, surviving regions keep their budget
-        # clamped to it, new regions start at the configured initial
-        self._fog_slots = self.cfg.fog_slots
-        rbud = np.full(new_r, min(self.cfg.initial_fog_budget,
-                                  self._fog_slots), np.int32)
-        lap = min(old_r, new_r)
-        rbud[:lap] = np.minimum(self._region_budget[:lap], self._fog_slots)
-        self._region_budget = rbud
+        if new_r == old_r:
+            # edge-width resize: region IDENTITY is preserved (region i
+            # is still region i, only its member set changed), so the
+            # per-region watermark carries over — its monotone clamp is
+            # per region identity, and resetting it here used to let a
+            # lagging joiner roll a region's reference back.  Every new
+            # slot reads its region's migrated value regardless of
+            # which old shard (or fresh row) fills it.
+            old_rwm = host.region_watermark.reshape(old_r, -1)[:, 0]
+            new_host = new_host._replace(
+                region_watermark=np.repeat(old_rwm, new_ee).astype(
+                    np.float32))
+            # fog budgets survive verbatim (the [R] vector is unchanged)
+            # and the slot ceiling only ever grows: shrinking it would
+            # clamp control-plane-grown budgets, firing spurious
+            # fog_budget_resize events on the next tick.  A non-binding
+            # config (no fog budget opted in) must keep tracking the
+            # new worst-case demand, or an edge-width grow would start
+            # shedding where flat semantics promise it never does.
+            self._fog_slots = max(self._fog_slots, self.cfg.fog_slots)
+            if self.cfg.fog_budget is None \
+                    and self.cfg.fog_budget_max is None:
+                self._region_budget = np.maximum(
+                    self._region_budget,
+                    np.int32(self.cfg.initial_fog_budget))
+        else:
+            # region-count change: regions are re-formed by the
+            # renumbering, so the per-region watermark restarts from
+            # scratch (it re-derives on the next tick; its monotone
+            # clamp is per region *identity*, which this resize does
+            # not preserve).  The fleet reference keeps its migrated
+            # (replicated) value — fleet identity does persist
+            new_host = new_host._replace(region_watermark=np.full(
+                new_e, np.finfo(np.float32).min, np.float32))
+            # fog budgets re-derive for the new region set: the ceiling
+            # tracks the new config, surviving regions keep their
+            # budget clamped to it, new regions start at the initial
+            self._fog_slots = self.cfg.fog_slots
+            rbud = np.full(new_r, min(self.cfg.initial_fog_budget,
+                                      self._fog_slots), np.int32)
+            lap = min(old_r, new_r)
+            rbud[:lap] = np.minimum(self._region_budget[:lap],
+                                    self._fog_slots)
+            self._region_budget = rbud
 
         self._healthy = np.asarray(
             [self._healthy[k] if k is not None else True for k in keep])

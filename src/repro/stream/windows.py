@@ -169,7 +169,10 @@ def window_features(x: jnp.ndarray, valid: jnp.ndarray, window: int,
     m = mask[:, :, None]
     count = jnp.sum(mask, axis=1).astype(jnp.int32)
     cf = jnp.maximum(count, 1).astype(x.dtype)[:, None]
-    s = jnp.sum(jnp.where(m, vals, 0), axis=1)
+    # sequential sum, like _masked_reduce: the fused-tick kernel sweeps
+    # its W accumulator steps left-to-right, and float sum is only
+    # bit-reproducible when the op order matches
+    s = _seq_combine(jnp.where(m, vals, 0), jnp.add)
     mx = jnp.where(count[:, None] > 0,
                    jnp.max(jnp.where(m, vals, jnp.finfo(x.dtype).min), axis=1), 0)
     mn = jnp.where(count[:, None] > 0,

@@ -16,6 +16,12 @@ The subprocess scripts run with 8 forced host devices (same pattern as
   with zero dropped records, the ``items_replayed`` counter matching
   an exact host-side recomputation, and the whole run on ONE trace
   (``active`` and ``replay`` are operands, not shapes);
+* with a *sliding* carry the controller's ``begin_replay_carry`` /
+  ``end_replay_carry`` bracket moves the departed stream's window
+  carry onto the backup and back, so the same leave -> replay -> join
+  arc equals the healthy oracle bit-for-bit (and every misuse of the
+  bracket — double begin/end, self-handoff, re-mesh mid-handoff — is
+  a loud error);
 * a true re-mesh (the device set changes) migrates surviving state
   rows, folds the departed shard's counters into its backup, costs
   exactly one re-trace each way (``trace_count <= 1 + retraces +
@@ -249,6 +255,111 @@ _SCRIPT = textwrap.dedent("""
     assert fx.trace_count <= ctl.max_trace_count
     print("CHURN_OK", exp_rep)
 
+    # --- sliding-carry churn: the controller's carry handoff makes
+    # batch-granular replay legal on a sliding config.  At leave the
+    # departed stream's window carry MOVES onto the backup's slot
+    # (begin_replay_carry stashes the backup's own carry host-side);
+    # at join the evolved carry moves back and the stash restores
+    # (end_replay_carry) — so the backup's own samples never smear
+    # into replayed windows and leave -> replay -> join equals the
+    # healthy oracle BIT-FOR-BIT. -------------------------------------
+    sscfg = StreamConfig(micro_batch=BATCH, window=16, stride=8,
+                         capacity=4 * BATCH, lateness=16.0)
+    assert sscfg.carry_len == 8, sscfg.carry_len
+
+    def make_sliding_fleet():
+        return FleetExecutor(
+            FleetConfig(stream=sscfg, num_shards=E, num_core=2,
+                        core_budget=64),
+            engine, pipe.two_tier_pipeline(edge_fn, core_fn, engine))
+
+    orc7 = make_sliding_fleet()
+    os7 = orc7.init_state(D)
+    oracle7 = [collections.defaultdict(list) for _ in range(E)]
+    for t in range(T):
+        items, ts = stream[t]
+        os7, out = orc7.step(os7, jnp.asarray(items), jnp.asarray(ts))
+        for e in range(E):
+            collect(out, e, oracle7[e])
+    oracle7 = [cat(o) for o in oracle7]
+
+    fx7 = make_sliding_fleet()
+    ctl7 = FleetController(
+        fx7, budget_policy=ElasticBudget(min_budget=64, max_budget=64))
+    inj7 = FaultInjector(FaultSchedule(
+        churn=[Churn(shard=SHARD, leave=LEAVE, join=JOIN)]))
+    st7 = fx7.init_state(D)
+    churned7 = [collections.defaultdict(list) for _ in range(E)]
+    backups7 = {}
+    t = 0
+    while t < T or inj7.pending or t < T + 4:
+        if t == LEAVE:
+            backup7 = ctl7.leave(SHARD)
+            assert backup7 is not None and backup7 != SHARD
+            backups7 = {SHARD: backup7}
+            st7 = ctl7.begin_replay_carry(st7, SHARD, backup7)
+        if t == JOIN:
+            st7 = ctl7.end_replay_carry(st7, SHARD, backup7)
+            ctl7.join(SHARD)
+        drain = t >= T
+        base = stream[t] if not drain else (
+            np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32))
+        items, ts, offered, replay = inj7.inject(t, *base,
+                                                 fresh=not drain,
+                                                 backups=backups7)
+        origin = inj7.origin.copy()
+        st7, out = fx7.step(st7, jnp.asarray(items), jnp.asarray(ts),
+                            offered=jnp.asarray(offered),
+                            replay=jnp.asarray(replay))
+        ctl7.tick(st7, step_times=np.full(E, 0.1))
+        for e in range(E):
+            if origin[e] >= 0:
+                collect(out, e, churned7[int(origin[e])])
+        t += 1
+    assert inj7.pending == 0
+    churned7 = [cat(c) for c in churned7]
+    md7 = st7.metrics.as_dict()
+    assert md7["shard"]["items_late"] == [0] * E, \\
+        md7["shard"]["items_late"]
+    assert md7["shard"]["items_replayed"][backup7] > 0
+    for e in range(E):
+        assert churned7[e]["agg"].shape == oracle7[e]["agg"].shape, \\
+            (e, churned7[e]["agg"].shape, oracle7[e]["agg"].shape)
+        np.testing.assert_array_equal(churned7[e]["agg"],
+                                      oracle7[e]["agg"], err_msg=str(e))
+        np.testing.assert_array_equal(churned7[e]["cons"],
+                                      oracle7[e]["cons"], err_msg=str(e))
+        np.testing.assert_array_equal(churned7[e]["outs"],
+                                      oracle7[e]["outs"], err_msg=str(e))
+    assert fx7.trace_count == 1, fx7.trace_count
+
+    # handoff bracket guards: double-end, self-handoff, double-begin
+    # and re-mesh during a live handoff are all loud errors
+    try:
+        ctl7.end_replay_carry(st7, SHARD, backup7)
+        assert False, "closed handoff must not close twice"
+    except ValueError as e:
+        assert "no live carry handoff" in str(e), e
+    try:
+        ctl7.begin_replay_carry(st7, SHARD, SHARD)
+        assert False, "self-handoff must raise"
+    except ValueError:
+        pass
+    st7 = ctl7.begin_replay_carry(st7, SHARD, backup7)
+    try:
+        ctl7.begin_replay_carry(st7, SHARD, backup7)
+        assert False, "double-begin must raise"
+    except ValueError as e:
+        assert "already live" in str(e), e
+    try:
+        ctl7.remesh(st7, devs[:4], keep=[0, 1, 2, 3])
+        assert False, "re-mesh during a live handoff must raise"
+    except ValueError as e:
+        assert "end_replay_carry" in str(e), e
+    st7 = ctl7.end_replay_carry(st7, SHARD, backup7)
+    print("SLIDING_CHURN_OK", int(backup7))
+
     # --- hierarchical churn: the backup is chosen INSIDE the departed
     # shard's region (replay traffic never crosses the region axis
     # while the region has a live member), and the leave -> replay ->
@@ -436,6 +547,7 @@ def test_fleet_churn(tmp_path):
     assert out.returncode == 0, out.stderr[-3000:]
     assert "REMESH_OK" in out.stdout
     assert "CHURN_OK" in out.stdout
+    assert "SLIDING_CHURN_OK" in out.stdout
     assert "REGION_CHURN_OK" in out.stdout
     assert "JOIN_CATCHUP_OK" in out.stdout
     assert "REMESH_FLEET_OK" in out.stdout
@@ -463,10 +575,12 @@ def test_injector_tolerates_none_backup():
     assert inj.pending == 2                      # the stream just waits
 
 
-def test_replay_rejects_sliding_carry():
-    """Batch-granular replay is tumbling-only: with a sliding carry the
-    backup's own samples would smear into the replayed stream's
-    windows — the executor must refuse loudly, not corrupt silently."""
+def test_replay_precondition_drained_ring():
+    """Batch-granular replay needs a per-tick-drained ring (offer size
+    <= micro_batch): replayed rows queued past their lateness-exempt
+    tick would land late-dropped on a later tick.  Sliding carries are
+    legal now — the controller's carry handoff covers them — so only
+    the drained-ring check remains, and it must still refuse loudly."""
     import pytest
 
     engine = rules.RuleEngine([
@@ -479,9 +593,65 @@ def test_replay_rejects_sliding_carry():
     state = ex.init_state(3)
     items = jnp.zeros((1, 16, 3), jnp.float32)
     ts = jnp.arange(16, dtype=jnp.float32)[None]
-    state, _ = ex.step(state, items, ts)      # no replay: sliding is fine
-    with pytest.raises(ValueError, match="tumbling"):
-        ex.step(state, items, ts, replay=np.array([True]))
+    state, _ = ex.step(state, items, ts)
+    # sliding carry + replay no longer refuses (the single-shard fleet
+    # has no foreign carry to smear; the handoff is the control plane's
+    # job on a real fleet — see FleetController.begin_replay_carry)
+    state, _ = ex.step(state, items, ts + 16, replay=np.array([True]))
+    # a ring the tick can't drain is still a loud error
+    big = jnp.zeros((1, 32, 3), jnp.float32)
+    bts = jnp.arange(32, dtype=jnp.float32)[None] + 32.0
+    with pytest.raises(ValueError, match="drained"):
+        ex.step(state, big, bts, replay=np.array([True]))
+
+
+def test_injector_translate_across_remesh():
+    """``FaultInjector.translate`` renumbers queued backlogs, replay
+    queues and the schedule through a re-mesh keep map; genuinely
+    unmappable pending work (queued batches, open fault/churn arcs)
+    errors loudly instead of silently disappearing."""
+    import pytest
+
+    from repro.stream.fleet import (Churn, Fault, FaultInjector,
+                                    FaultSchedule)
+
+    E, BATCH, D = 8, 8, 2
+    sched = FaultSchedule(
+        faults=[Fault(shard=1, start=2, end=12)],
+        churn=[Churn(shard=5, leave=1, join=None),
+               Churn(shard=6, leave=0, join=2)])     # completed arc
+    inj = FaultInjector(sched)
+    base = (np.zeros((E, BATCH, D), np.float32),
+            np.zeros((E, BATCH), np.float32))
+    for t in range(4):
+        inj.inject(t, *base, fresh=True)
+    assert inj.pending > 0
+    # shard 5 departed with a queued replay backlog: dropping it fails
+    with pytest.raises(ValueError, match="pending replay"):
+        inj.translate([0, 1, 2, 3], tick=4)
+    # keep 5 and 6: queues and schedule renumber (old 5 -> new 2,
+    # old 6 -> new 3; old 1 keeps its number)
+    inj.translate([0, 1, 5, 6], tick=4)
+    assert {f.shard for f in inj.schedule.faults} == {1}
+    assert {c.shard for c in inj.schedule.churn} == {2, 3}
+    assert inj.origin is None                    # stale map invalidated
+    assert len(inj._replay[2]) == 3              # queue moved with slot
+    items, ts, offered, replay = inj.inject(
+        4, np.zeros((4, BATCH, D), np.float32),
+        np.zeros((4, BATCH), np.float32), fresh=True, backups={2: 0})
+    assert replay[0] and inj.origin[0] == 2      # backup replays new 2
+    assert not offered[1].any()                  # fault followed shard 1
+    assert inj.origin[3] == 3                    # rejoined slot drains
+    # dropping a shard mid-fault-window errors loudly
+    inj2 = FaultInjector(FaultSchedule(
+        faults=[Fault(shard=2, start=6, end=9)]))
+    with pytest.raises(ValueError, match="fault window"):
+        inj2.translate([0, 1], tick=4)
+    # fully-elapsed entries for dropped shards go silently
+    inj3 = FaultInjector(FaultSchedule(
+        faults=[Fault(shard=2, start=0, end=3)]))
+    inj3.translate([0, 1], tick=4)
+    assert inj3.schedule.faults == ()
 
 
 def test_step_times_execution_not_dispatch():

@@ -17,7 +17,12 @@ The subprocess scripts run with 8 forced host devices (same pattern as
   re-trace past it; the controller's per-region ``ElasticBudget`` loop
   actuates them and logs ``fog_budget_resize`` events;
 * **axis re-mesh** — ``remesh`` resizes either mesh axis (one per
-  call) with ``trace_count <= 1 + retraces + remeshes`` across the arc.
+  call) with ``trace_count <= 1 + retraces + remeshes`` across the arc;
+* **region identity across an edge resize** — an edge-width re-mesh
+  (fixed region axis) preserves per-region watermarks, grown fog
+  budgets and the controller's per-region ``ElasticBudget`` objects
+  (their hysteresis state included): a fleet saturated at its budget
+  ceiling emits zero spurious ``fog_budget_resize`` events afterwards.
 
 The main-process tests are seeded-random property checks over the
 numpy references (``region_survivor_counts``, ``fog_recv_occupancy``,
@@ -289,6 +294,57 @@ _SCRIPT = textwrap.dedent("""
     except ValueError as e:
         assert "one axis per call" in str(e)
     print("AXIS_REMESH_OK", fx4.trace_count)
+
+    # --- 5. edge-width re-mesh carries region IDENTITY: per-region
+    #        watermarks, grown fog budgets and the caller's ElasticBudget
+    #        policy objects (hysteresis state and all) survive an edge
+    #        resize, so a fleet at its budget ceiling emits ZERO spurious
+    #        fog_budget_resize events after the shrink ------------------
+    log5 = EventLog()
+    fx5 = FleetExecutor(
+        FleetConfig(stream=scfg, num_shards=E, num_core=2,
+                    core_budget=256, num_regions=R, fog_budget=2,
+                    fog_budget_max=2 * EPER * nw),
+        eng2, two_tier(eng2))
+    M = 6
+    pols = [ElasticBudget(min_budget=2, max_budget=M) for _ in range(R)]
+    ctl5 = FleetController(
+        fx5, budget_policy=ElasticBudget(min_budget=256, max_budget=256),
+        region_policies=pols, event_log=log5)
+    st5 = fx5.init_state(D)
+    t5 = 0.0
+    def step5(e):
+        global t5, st5
+        items = rng.standard_normal((e, BATCH, D)).astype(np.float32)
+        ts = np.tile(t5 + np.arange(BATCH, dtype=np.float32), (e, 1))
+        t5 += BATCH
+        st5, _ = fx5.step(st5, jnp.asarray(items), jnp.asarray(ts))
+        return ctl5.tick(st5, step_times=np.full(e, 0.1))
+    for _ in range(8):              # saturate: budgets ramp 2 -> M
+        step5(E)
+    assert (fx5.region_budget == M).all(), fx5.region_budget
+    evts_before = len(log5.of_kind("fog_budget_resize"))
+    assert evts_before > 0
+    pre_rwm = np.asarray(st5.region_watermark).reshape(R, EPER)[:, 0]
+    assert (pre_rwm > -1e30).all(), pre_rwm
+
+    st5, _ = ctl5.remesh(st5, devs[:4], keep=[0, 1, 4, 5])  # edge 4 -> 2
+    assert fx5.cfg.num_regions == R and fx5.cfg.num_shards == 4
+    # grown budgets, the caller's policy objects and the per-region
+    # clocks all survived the resize (region identity is preserved,
+    # only the edge width changed)
+    assert (fx5.region_budget == M).all(), fx5.region_budget
+    assert ctl5.region_policies is pols
+    np.testing.assert_array_equal(
+        np.asarray(st5.region_watermark).reshape(R, 2)[:, 0], pre_rwm)
+    for _ in range(4):              # still saturated at the ceiling
+        step5(4)
+    # budgets already at max_budget: no-op proposals fire NO events
+    fog_after = log5.of_kind("fog_budget_resize")[evts_before:]
+    assert fog_after == [], fog_after
+    assert (fx5.region_budget == M).all()
+    EventLog.validate(log5.records)
+    print("REGION_REMESH_STATE_OK", evts_before)
 """)
 
 
@@ -306,6 +362,7 @@ def test_fleet_regions_oracle(tmp_path):
     assert "FOG_BUDGET_OK" in out.stdout
     assert "FOG_CONTROL_OK" in out.stdout
     assert "AXIS_REMESH_OK" in out.stdout
+    assert "REGION_REMESH_STATE_OK" in out.stdout
 
 
 # --- seeded property checks on the numpy references ----------------------

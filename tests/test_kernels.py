@@ -6,8 +6,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import profiles as P
+from repro.core import rules
 from repro.kernels.armatch import armatch, armatch_ref
 from repro.kernels.decode_attn import decode_attention, decode_attn_ref
+from repro.kernels.fused_tick import fused_tick, fused_tick_ref
 from repro.kernels.hilbert import hilbert_xy2d, hilbert_xy2d_ref
 
 
@@ -107,3 +109,96 @@ def test_decode_attn_zero_length():
                                       block_s=64, interpret=True))
     assert np.isfinite(out).all()
     assert np.abs(out[0]).max() == 0.0
+
+
+# ---- fused stream tick (window + features + rules in one pass) ----------
+
+#: conflict set exercising all five feature columns' comparison ops and
+#: the priority overwrite order (lowest precedence applied first)
+_TICK_TABLE = rules.RuleEngine([
+    rules.threshold_rule("hot", 0, ">=", 0.5, rules.C_SEND_CORE,
+                         priority=2),
+    rules.threshold_rule("sparse", 4, "<", 6.0, rules.C_STORE_EDGE,
+                         priority=1),
+    rules.threshold_rule("spike", 1, ">", 2.5, rules.C_TRIGGER_TOPOLOGY,
+                         priority=3),
+]).table()
+
+
+def _tick_block(rng, t, d, p_valid=0.75):
+    """Executor-convention ring rows: [event_ts | ingest_wall | features]."""
+    seq = np.concatenate([
+        np.arange(t, dtype=np.float32)[:, None],
+        (rng.random(t).astype(np.float32) * 10.0)[:, None],
+        rng.standard_normal((t, d)).astype(np.float32)], axis=1)
+    valid = rng.random(t) < p_valid
+    return jnp.asarray(seq), jnp.asarray(valid)
+
+
+@pytest.mark.parametrize("t,d,w,s", [
+    (32, 3, 8, 8),       # tumbling
+    (40, 3, 16, 8),      # sliding (the executor's carry framing)
+    (24, 1, 8, 4),       # single feature column
+    (40, 5, 4, 1),       # dense stride-1
+    (16, 130, 8, 8),     # row block wider than one lane tile
+    (9, 2, 8, 8),        # single window, ragged tail rows
+])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_tick_matches_ref(backend, t, d, w, s):
+    """Both fused backends against the pure-numpy oracle, bit for bit
+    (same sequential accumulation order, not approximately)."""
+    rng = np.random.default_rng(t * 100 + d * 10 + s)
+    seq, valid = _tick_block(rng, t, d)
+    got = fused_tick(seq, valid, w, s, table=_TICK_TABLE, min_count=2,
+                     backend=backend, interpret=True)
+    ref = fused_tick_ref(np.asarray(seq), np.asarray(valid), w, s,
+                         _TICK_TABLE, min_count=2)
+    for name, a, b in zip(("agg", "wcount", "feats", "w_birth", "cons"),
+                          got, ref):
+        np.testing.assert_array_equal(np.asarray(a), b, err_msg=name)
+
+
+def test_fused_tick_all_invalid_rows():
+    """Empty windows produce reduction identities forced to zero (no
+    +-inf leaks from the masked max/min) and never fire rules."""
+    seq = jnp.asarray(np.ones((16, 4), np.float32) * 7.0)
+    valid = jnp.zeros(16, bool)
+    for backend in ("jnp", "pallas"):
+        agg, wcount, feats, w_birth, cons = fused_tick(
+            seq, valid, 8, 8, table=_TICK_TABLE, backend=backend,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(wcount), 0)
+        np.testing.assert_array_equal(np.asarray(agg), 0.0)
+        np.testing.assert_array_equal(np.asarray(feats), 0.0)
+        np.testing.assert_array_equal(np.asarray(w_birth), 0.0)
+        np.testing.assert_array_equal(np.asarray(cons), 0)
+
+
+def test_fused_tick_min_count_gates_consequences():
+    """Windows under min_count are forced to C_NONE in kernel — an
+    always-true rule must not fire on an underrun window."""
+    rng = np.random.default_rng(7)
+    seq, _ = _tick_block(rng, 32, 3, p_valid=1.0)
+    valid = jnp.asarray(np.arange(32) % 4 == 0)   # 2 valid rows per window
+    always = rules.RuleEngine([
+        rules.threshold_rule("always", 4, ">=", 0.0,
+                             rules.C_SEND_CORE)]).table()
+    for backend in ("jnp", "pallas"):
+        *_, cons_lo = fused_tick(seq, valid, 8, 8, table=always,
+                                 min_count=1, backend=backend,
+                                 interpret=True)
+        *_, cons_hi = fused_tick(seq, valid, 8, 8, table=always,
+                                 min_count=3, backend=backend,
+                                 interpret=True)
+        np.testing.assert_array_equal(np.asarray(cons_lo),
+                                      rules.C_SEND_CORE)
+        np.testing.assert_array_equal(np.asarray(cons_hi), rules.C_NONE)
+
+
+def test_fused_tick_rejects_non_tabular_table():
+    """Callable rules can't run inside the kernel: table=None (what
+    RuleEngine.table() returns for them) must refuse loudly."""
+    seq = jnp.zeros((16, 4))
+    valid = jnp.ones(16, bool)
+    with pytest.raises(ValueError, match="tabular"):
+        fused_tick(seq, valid, 8, 8, table=None)

@@ -491,6 +491,136 @@ def test_executor_pallas_backend_matches_jnp_bitwise(rng):
         np.testing.assert_array_equal(a, b, err_msg=field)
 
 
+def test_executor_fused_matches_staged_bitwise(rng):
+    """The fused tick (StreamConfig(fused=True)) must reproduce the
+    staged window -> features -> rules path bit-for-bit on both fused
+    backends, across steps with live carry, stragglers hitting the
+    watermark, and a multi-rule conflict set — outputs AND metrics."""
+    runs = {}
+    for key, fused, backend in (("staged", False, "jnp"),
+                                ("fused-jnp", True, "jnp"),
+                                ("fused-pallas", True, "pallas")):
+        cfg = StreamConfig(micro_batch=32, window=16, stride=8,
+                           capacity=128, lateness=8.0, fused=fused,
+                           backend=backend, interpret=backend == "pallas")
+        engine = rules.RuleEngine([
+            rules.threshold_rule("hot", 0, ">=", 0.5, rules.C_SEND_CORE,
+                                 priority=1),
+            rules.threshold_rule("sparse", 4, "<", 8.0,
+                                 rules.C_STORE_EDGE)])
+        p = pipe.two_tier_pipeline(lambda _, b: (b, b[:, :5]),
+                                   lambda _, b: (b + 100.0, b[:, :5]),
+                                   engine, core_capacity=2)
+        ex = StreamExecutor(cfg, engine, p)
+        state = ex.init_state(3)
+        feed = np.random.default_rng(11)
+        outs, t0 = [], 0.0
+        for i in range(6):
+            items = jnp.asarray(feed.standard_normal((32, 3)), jnp.float32)
+            ts = np.asarray(t0 + np.arange(32), np.float32)
+            if i == 3:
+                ts[:2] -= 1000.0          # stragglers hit the watermark
+            t0 += 32
+            state, out = ex.step(state, items, jnp.asarray(ts))
+            outs.append(jax.device_get(out))
+        assert ex.trace_count == 1
+        runs[key] = (outs, jax.device_get(state.metrics))
+    base_outs, base_metrics = runs["staged"]
+    for key in ("fused-jnp", "fused-pallas"):
+        for so, fo in zip(base_outs, runs[key][0]):
+            for field, a, b in zip(so._fields, so, fo):
+                np.testing.assert_array_equal(a, b,
+                                              err_msg=f"{key}:{field}")
+        for field, a, b in zip(base_metrics._fields, base_metrics,
+                               runs[key][1]):
+            np.testing.assert_array_equal(a, b, err_msg=f"{key}:{field}")
+
+
+def test_executor_fused_requires_tabular_engine():
+    """Callable rules can't run inside the fused kernel: the executor
+    must refuse fused=True at construction, not corrupt at step time."""
+    cfg = StreamConfig(micro_batch=32, window=16, stride=8, capacity=128,
+                       fused=True)
+    engine = rules.RuleEngine([
+        rules.deadline_rule("slow", 4, 100.0)])      # callable-only rule
+    assert engine.table() is None
+    p = pipe.two_tier_pipeline(lambda _, b: (b, b[:, :5]),
+                               lambda _, b: (b, b[:, :5]), engine)
+    with pytest.raises(ValueError, match="tabular"):
+        StreamExecutor(cfg, engine, p)
+
+
+def _overlap_batches(steps=5, batch=32, d=3, seed=5):
+    feed = np.random.default_rng(seed)
+    batches, t0 = [], 0.0
+    for _ in range(steps):
+        items = feed.standard_normal((batch, d)).astype(np.float32)
+        ts = (t0 + np.arange(batch)).astype(np.float32)
+        t0 += batch
+        batches.append((jnp.asarray(items), jnp.asarray(ts)))
+    return batches
+
+
+def test_run_overlap_ingest_matches_direct_bitwise(rng):
+    """Overlapped host ingest staging changes delivery *timing* only:
+    with int8 off, run() outputs and metrics are bitwise those of the
+    direct loop, every batch delivered (the flush drains the tail)."""
+    batches = _overlap_batches()
+    runs = {}
+    for overlap in (False, True):
+        cfg = StreamConfig(micro_batch=32, window=16, stride=8,
+                           capacity=128, lateness=8.0,
+                           overlap_ingest=overlap)
+        engine = rules.RuleEngine([
+            rules.threshold_rule("hot", 0, ">=", 0.5,
+                                 rules.C_SEND_CORE)])
+        p = pipe.two_tier_pipeline(lambda _, b: (b, b[:, :5]),
+                                   lambda _, b: (b + 100.0, b[:, :5]),
+                                   engine, core_capacity=2)
+        ex = StreamExecutor(cfg, engine, p)
+        state, outs = ex.run(ex.init_state(3), iter(batches))
+        assert ex.trace_count == 1
+        assert len(outs) == len(batches)
+        runs[overlap] = ([jax.device_get(o) for o in outs],
+                         jax.device_get(state.metrics))
+    for sa, sb in zip(runs[False][0], runs[True][0]):
+        for field, a, b in zip(sa._fields, sa, sb):
+            np.testing.assert_array_equal(a, b, err_msg=field)
+    for field, a, b in zip(runs[False][1]._fields, runs[False][1],
+                           runs[True][1]):
+        np.testing.assert_array_equal(a, b, err_msg=field)
+
+
+def test_run_overlap_int8_staging_is_lossy_but_complete(rng):
+    """int8-quantized staging is opt-in and lossy: every batch still
+    arrives (conservation holds), values only approximately (per-batch
+    amax/127 scale), timestamps exactly (never quantized)."""
+    batches = _overlap_batches()
+    cfg = StreamConfig(micro_batch=32, window=16, stride=8, capacity=128,
+                       lateness=8.0, overlap_ingest=True, ingest_int8=True)
+    engine = rules.RuleEngine([
+        rules.threshold_rule("hot", 0, ">=", 0.5, rules.C_SEND_CORE)])
+    p = pipe.two_tier_pipeline(lambda _, b: (b, b[:, :5]),
+                               lambda _, b: (b + 100.0, b[:, :5]),
+                               engine, core_capacity=2)
+    ex = StreamExecutor(cfg, engine, p)
+    state, outs = ex.run(ex.init_state(3), iter(batches))
+    m = state.metrics
+    assert int(m.steps) == len(batches)
+    assert int(m.items_dequeued) == 32 * len(batches)
+    assert int(m.items_late) == 0             # exact ts: watermark clean
+    # windows aggregate the dequantized values: close, not (in general)
+    # bit-equal to the exact-f32 run
+    exact = StreamExecutor(
+        StreamConfig(micro_batch=32, window=16, stride=8, capacity=128,
+                     lateness=8.0), engine, p)
+    estate, eouts = exact.run(exact.init_state(3), iter(batches))
+    for eo, qo in zip(eouts, outs):
+        np.testing.assert_allclose(np.asarray(qo.aggregates),
+                                   np.asarray(eo.aggregates),
+                                   rtol=0.05, atol=0.05)
+
+
 def test_metrics_as_dict_snapshot(rng):
     ex, state = _make_executor()
     state, _, _ = _feed(ex, state, rng, 3)
@@ -536,3 +666,6 @@ def test_stream_config_validation():
         StreamConfig(micro_batch=32, window=8, stride=16)   # stride > window
     with pytest.raises(ValueError):
         StreamConfig(micro_batch=32, window=8, stride=8, capacity=16)
+    with pytest.raises(ValueError):     # int8 rides the overlap stager
+        StreamConfig(micro_batch=32, window=16, stride=8,
+                     ingest_int8=True)
