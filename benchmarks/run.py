@@ -18,7 +18,7 @@ usage message.
 """
 import sys
 
-from benchmarks import (common, fleet, messaging, pipeline_e2e,
+from benchmarks import (common, fleet, ingest, messaging, pipeline_e2e,
                         roofline_report, routing, scaling, store_query,
                         streaming, tiering)
 
@@ -30,6 +30,7 @@ SUITES = {
     "scaling": scaling.bench,          # paper Figs. 11-12
     "pipeline_e2e": pipeline_e2e.bench,  # paper Fig. 14
     "streaming": streaming.bench,      # continuous stream analytics
+    "ingest": ingest.bench,            # admission lane: dedupe/backfill
     "fleet": fleet.bench,              # sharded edge fleet, E in {1,4,8}
     "fleet_faults":                    # degraded fleet under control plane
         lambda: fleet.bench(faults=True),

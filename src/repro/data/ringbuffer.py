@@ -109,3 +109,12 @@ def dequeue(rb: RingBuffer, n: int) -> tuple[RingBuffer, jnp.ndarray, jnp.ndarra
 
 def size(rb: RingBuffer) -> jnp.ndarray:
     return rb.head - rb.tail
+
+
+def free_space(rb: RingBuffer) -> jnp.ndarray:
+    """Rows the next enqueue can accept before backpressure.  Backfill
+    feeders size their historical offers with this so a reprocessing
+    run never competes with live traffic for ring slots (rows past it
+    are rejected, counted, and must be re-offered — see the enqueue
+    contract above)."""
+    return rb.buf.shape[0] - (rb.head - rb.tail)

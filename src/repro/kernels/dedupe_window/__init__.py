@@ -1,0 +1,5 @@
+from repro.kernels.dedupe_window.ops import (dedupe_window, row_hash,
+                                             seen_record)  # noqa: F401
+from repro.kernels.dedupe_window.ref import (EMPTY_HASH, dedupe_window_ref,
+                                             row_hash_ref,
+                                             seen_record_ref)  # noqa: F401

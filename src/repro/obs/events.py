@@ -49,6 +49,8 @@ EVENT_KINDS = frozenset({
     "fog_budget_resize",  # a region's elastic fog budget changed
     "slo_breach",        # an SLO's burn rate crossed threshold (both windows)
     "slo_recover",       # a breached SLO's burn rate dropped back under
+    "ingest_reject",     # admission lane dropped rows (contract/backpressure)
+    "drift_detected",    # per-field contract violations moved this tick
 })
 
 #: Envelope fields present on every record (payload keys ride alongside).

@@ -4,9 +4,12 @@ Two snapshot shapes, both golden-key tested so a refactor can never
 silently drop or rename a counter the perf trajectory depends on:
 
 * :func:`metrics_snapshot` — one executor's full observability state:
-  ``StreamMetrics``/``FleetMetrics`` counters, the in-step latency
-  histogram's percentiles, the tracer's per-stage breakdown, and the
-  trace count, in one dict.
+  ``StreamMetrics``/``FleetMetrics`` counters (including the admission
+  lane's ``items_deduped`` / ``items_backfilled`` and the per-field
+  ``drift_counts`` list — exactly-once accounting rides the same
+  snapshot as throughput), the in-step latency histogram's
+  percentiles, the tracer's per-stage breakdown, and the trace count,
+  in one dict.
 * :func:`bench_payload` / :func:`write_bench` — the committed
   ``BENCH_<suite>.json`` artifact behind ``benchmarks/run.py --json``:
   the suite's CSV rows (``derived`` parsed into a dict) plus platform

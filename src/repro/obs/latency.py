@@ -47,7 +47,11 @@ DEFAULT_EDGES = np.logspace(-6.0, 2.0, 121)
 #: rank receive (per record crossing the region axis, measured at the
 #: core); ``e2e`` = admission -> commit (per committed window — equals
 #: ``window`` whenever the whole exchange completes inside the tick,
-#: and diverges once execution overlaps ticks).
+#: and diverges once execution overlaps ticks).  "Admission" here is
+#: *post*-admission-lane: the ingest stamp is written at ring enqueue,
+#: so rows the lane drops (dedupe, contract) never enter the lineage —
+#: the queueing stage measures accepted-row residency, and rejected or
+#: deduped traffic shows in the counters/EventLog instead.
 LINEAGE_STAGES = ("queueing", "window", "hop1", "hop2", "e2e")
 
 

@@ -42,21 +42,26 @@ class IngestStager:
         self.int8 = int8
         self._pending = None
 
-    def _put(self, items, ts):
+    def _put(self, items, ts, mode):
         import numpy as np
         ts_dev = jax.device_put(jnp.asarray(ts, jnp.float32))
         if not self.int8:
-            return jax.device_put(jnp.asarray(items, jnp.float32)), ts_dev
+            return (jax.device_put(jnp.asarray(items, jnp.float32)),
+                    ts_dev, mode)
         host = np.asarray(items, np.float32)
         amax = float(np.max(np.abs(host))) if host.size else 0.0
         scale = amax / 127.0 if amax > 0 else 1.0
         q = np.clip(np.round(host / scale), -127, 127).astype(np.int8)
-        return (jax.device_put(q), jnp.float32(scale)), ts_dev
+        return (jax.device_put(q), jnp.float32(scale)), ts_dev, mode
 
-    def stage(self, items, ts):
-        """Start transferring (items, ts); return the previous batch
-        (device-resident, dequantized) or ``None`` while priming."""
-        prev, self._pending = self._pending, self._put(items, ts)
+    def stage(self, items, ts, mode=0):
+        """Start transferring (items, ts); return the previous batch as
+        ``(items, ts, mode)`` (device-resident, dequantized) or
+        ``None`` while priming.  ``mode`` (``stream.ingest.MODE_*``)
+        rides the double buffer with its batch: a replay/backfill
+        batch staged behind a live one is still delivered with its own
+        mode — overlap must never launder reprocessed data into live."""
+        prev, self._pending = self._pending, self._put(items, ts, mode)
         return self._deliver(prev)
 
     def flush(self):
@@ -67,11 +72,11 @@ class IngestStager:
     def _deliver(self, staged):
         if staged is None:
             return None
-        payload, ts = staged
+        payload, ts, mode = staged
         if self.int8:
             q, scale = payload
-            return q.astype(jnp.float32) * scale, ts
-        return payload, ts
+            return q.astype(jnp.float32) * scale, ts, mode
+        return payload, ts, mode
 
 
 def microbatched_grads(loss_fn: Callable, params, batch: dict,

@@ -12,6 +12,13 @@ from repro.stream.executor import (  # noqa: F401
     StreamMetrics,
     StreamState,
 )
+from repro.stream.ingest import (  # noqa: F401
+    MODE_BACKFILL,
+    MODE_LIVE,
+    MODE_REPLAY,
+    AdmissionPlan,
+    DataContract,
+)
 
 # the fleet layer (repro.stream.fleet) is imported lazily by its users:
 # it pulls in shard_map machinery that single-device paths don't need

@@ -43,6 +43,7 @@ from repro.data import ringbuffer as rbuf
 from repro.obs import costmodel as OC
 from repro.obs import latency as OL
 from repro.obs.trace import NULL_TRACER
+from repro.stream import ingest as I
 from repro.stream import windows as W
 
 
@@ -61,6 +62,7 @@ class StreamConfig:
     fused: bool = False            # fused window+features+rules tick
     overlap_ingest: bool = False   # stage tick N+1 during tick N (run())
     ingest_int8: bool = False      # int8-quantize staged telemetry (lossy)
+    admission: I.AdmissionPlan = I.AdmissionPlan()   # dedupe + contract lane
 
     def __post_init__(self):
         if not (0 < self.stride <= self.window):
@@ -92,27 +94,32 @@ class StreamMetrics(NamedTuple):
     items_dequeued: jnp.ndarray    # consumed by the executor
     items_late: jnp.ndarray        # dropped by the watermark
     items_replayed: jnp.ndarray    # backup-replay records (lateness-exempt)
+    items_deduped: jnp.ndarray     # offered rows dropped as re-deliveries
+    items_backfilled: jnp.ndarray  # backfill-mode records (lateness-exempt)
     windows_emitted: jnp.ndarray   # windows with >= min_count samples
     rules_fired: jnp.ndarray       # windows with consequence != NONE
     windows_escalated: jnp.ndarray # sent to the core tier
     windows_stored: jnp.ndarray    # store-at-edge consequence
     windows_dropped: jnp.ndarray   # quality-dropped
     core_overflow: jnp.ndarray     # flagged beyond core_capacity
+    drift_counts: jnp.ndarray      # [D] per-field contract violations
 
     def as_dict(self) -> dict[str, int | list[int]]:
         """Host-side snapshot: one ``jax.device_get`` for the whole
         tuple (a single transfer, not one sync per counter), plain
-        ints.  Per-shard [E] counters come back as lists of ints."""
+        ints.  Array counters (per-shard [E] views, the per-field
+        ``drift_counts``) come back as lists of ints."""
         host = jax.device_get(self)
         return {k: v.tolist() if getattr(v, "ndim", 0) else int(v)
                 for k, v in zip(self._fields, host)}
 
 
-def _zero_metrics() -> StreamMetrics:
+def _zero_metrics(feature_dim: int) -> StreamMetrics:
     # distinct buffers per counter: the step donates its state, and XLA
     # rejects donating one aliased buffer through several arguments
     return StreamMetrics(*(jnp.zeros((), jnp.int32)
-                           for _ in StreamMetrics._fields))
+                           for _ in StreamMetrics._fields[:-1]),
+                         drift_counts=jnp.zeros((feature_dim,), jnp.int32))
 
 
 #: Ring rows are [ts | ingest_wall | features]: ``META_COLS`` leading
@@ -129,6 +136,7 @@ class StreamState(NamedTuple):
     carry_valid: jnp.ndarray       # [W-S] bool
     max_ts: jnp.ndarray            # [] f32 running max event time
     metrics: StreamMetrics
+    adm: I.AdmissionState          # dedupe-window ring ([0] when inert)
 
 
 class StepOutput(NamedTuple):
@@ -161,6 +169,10 @@ class IngestResult(NamedTuple):
     n_late: jnp.ndarray
     n_late_excluded: jnp.ndarray   # admitted, but late vs the fleet ref
     n_replayed: jnp.ndarray        # replay-mode records (never late-dropped)
+    n_deduped: jnp.ndarray         # offered rows dropped by the dedupe window
+    n_backfilled: jnp.ndarray      # backfill-mode records (never late-dropped)
+    drift: jnp.ndarray             # [D] per-field contract violations
+    adm: I.AdmissionState          # rotated dedupe window (post-record)
     q_lat: jnp.ndarray             # [B] f32 queueing delay per dequeued row
     q_mask: jnp.ndarray            # [B] bool which rows were dequeued
     w_birth: jnp.ndarray           # [NW] f32 oldest ingest stamp per window
@@ -173,6 +185,7 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
                       offer_mask: jnp.ndarray | None = None,
                       excluded_ref: jnp.ndarray | None = None,
                       replay: jnp.ndarray | None = None,
+                      mode: jnp.ndarray | None = None,
                       now: jnp.ndarray | float = 0.0
                       ) -> IngestResult:
     """enqueue -> dequeue -> watermark -> carry-continuous windows ->
@@ -208,6 +221,25 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
     consume ring capacity like any offer: rows a full ring rejects
     surface in ``items_rejected``.)
 
+    ``mode``: optional [] int32 traced operand generalizing ``replay``
+    to the full ingest-mode lane (``stream.ingest``): ``MODE_LIVE``
+    ticks behave exactly as before, ``MODE_REPLAY`` is the backup-
+    replay semantics above, ``MODE_BACKFILL`` shares the lateness
+    exemption and clock neutrality but accounts its records in
+    ``n_backfilled`` — historical reprocessing as a first-class mode,
+    not a churn side effect.  Passing both ``replay`` and ``mode`` is
+    an error; ``replay=`` remains as the boolean shorthand.
+
+    Before any row reaches the ring it passes the admission lane
+    configured by ``cfg.admission`` (``stream.ingest.AdmissionPlan``):
+    FNV event-id hashing + bounded-window idempotent dedupe
+    (``kernels.dedupe_window``) and per-field contract validation,
+    both as fixed-shape masked stages feeding the enqueue offer mask.
+    Deduped rows surface in ``n_deduped`` (never in the ring), contract
+    rejects in the per-field ``drift`` counters and the offered-minus-
+    accepted backpressure accounting.  The default (inert) plan skips
+    the lane statically — zero added ops, bit-for-bit the old path.
+
     ``now``: this tick's host wall time (seconds since the executor's
     epoch, a traced f32 scalar).  Every enqueued row is stamped with it
     (the lineage birth stamp: replayed rows get a *fresh* stamp at
@@ -221,7 +253,14 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
       (the window-residency and end-to-end measurements' reference;
       all-invalid windows report 0 and are masked by ``emit``).
     """
+    if replay is not None and mode is not None:
+        raise ValueError("pass either replay= (bool shorthand) or "
+                         "mode= (stream.ingest mode code), not both")
+    if replay is not None:
+        mode = jnp.where(jnp.asarray(replay, bool),
+                         jnp.int32(I.MODE_REPLAY), jnp.int32(I.MODE_LIVE))
     n_in = items.shape[0]
+    plan = cfg.admission
     held = state.rb.head - state.rb.tail       # rows queued before this offer
     now = jnp.asarray(now, jnp.float32)
     with jax.named_scope("obs:ingest"):
@@ -231,34 +270,59 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
              items.astype(jnp.float32)],
             axis=1)
         if offer_mask is None:
-            rb, n_acc = rbuf.enqueue(state.rb, rows_in)
             n_offered = jnp.int32(n_in)
         else:
-            rb, n_acc = rbuf.enqueue(state.rb, rows_in, offer_mask)
             n_offered = jnp.sum(offer_mask.astype(jnp.int32))
+        if plan.inert:
+            # statically no admission lane: the pre-existing enqueue
+            # path verbatim (bit-for-bit, zero added ops)
+            n_dedup = jnp.zeros((), jnp.int32)
+            drift = jnp.zeros((items.shape[1],), jnp.int32)
+            adm = state.adm
+            if offer_mask is None:
+                rb, n_acc = rbuf.enqueue(state.rb, rows_in)
+            else:
+                rb, n_acc = rbuf.enqueue(state.rb, rows_in, offer_mask)
+        else:
+            with jax.named_scope("obs:admission"):
+                gate = I.admission_gate(plan, state.adm, ts, items,
+                                        offer_mask)
+                rb, n_acc = rbuf.enqueue(state.rb, rows_in, gate.admit)
+                adm = I.admission_record(plan, state.adm, gate, n_acc)
+            n_dedup = gate.n_deduped
+            drift = gate.drift
         rb, rows, valid = rbuf.dequeue(rb, cfg.micro_batch)
     wm = state.max_ts if watermark_ts is None else watermark_ts
     dequeued = valid
-    with jax.named_scope("obs:watermark"):
-        valid, n_late, max_ts = W.apply_watermark(
-            rows[:, 0], valid, wm, cfg.lateness)
-    max_ts = jnp.maximum(state.max_ts, max_ts)
-    if replay is None:
-        exempt = jnp.zeros(dequeued.shape, bool)
-        n_rep = jnp.zeros((), jnp.int32)
+    if mode is None:
+        exempt = None
     else:
         # FIFO positional split: rows the ring held before this offer
         # dequeue first and keep exact normal semantics; only the rows
-        # the replay offer contributed are lateness-exempt
+        # a replay/backfill offer contributed are lateness-exempt
+        mode = jnp.asarray(mode, jnp.int32)
+        reproc = mode >= I.MODE_REPLAY
         pos = jnp.arange(cfg.micro_batch, dtype=held.dtype)
-        exempt = jnp.asarray(replay, bool) & (pos >= held)
-        valid = jnp.where(exempt, dequeued, valid)
-        n_rep = jnp.sum((exempt & dequeued).astype(jnp.int32))
-        n_late = jnp.sum((dequeued & ~valid & ~exempt).astype(jnp.int32))
+        exempt = reproc & (pos >= held)
+    with jax.named_scope("obs:watermark"):
+        valid, n_late, max_ts = W.apply_watermark(
+            rows[:, 0], valid, wm, cfg.lateness, exempt=exempt)
+    max_ts = jnp.maximum(state.max_ts, max_ts)
+    if mode is None:
+        exempt = jnp.zeros(dequeued.shape, bool)
+        n_rep = jnp.zeros((), jnp.int32)
+        n_bf = jnp.zeros((), jnp.int32)
+    else:
+        n_ex = jnp.sum((exempt & dequeued).astype(jnp.int32))
+        n_rep = jnp.where(mode == I.MODE_REPLAY, n_ex, 0)
+        n_bf = jnp.where(mode == I.MODE_BACKFILL, n_ex, 0)
+        # reprocessed rows never advance the local event-time clock: a
+        # foreign/historical stream must not perturb it, or the host's
+        # own still-queued batches would arrive "late" against it
         own_max = jnp.max(jnp.where(
             dequeued & ~exempt, rows[:, 0],
             jnp.asarray(jnp.finfo(jnp.float32).min)))
-        max_ts = jnp.where(jnp.asarray(replay, bool),
+        max_ts = jnp.where(reproc,
                            jnp.maximum(state.max_ts, own_max),  # own rows
                            max_ts)                     # foreign clock apart
     if excluded_ref is None:
@@ -323,6 +387,7 @@ def ingest_and_window(cfg: StreamConfig, engine: R.RuleEngine,
         n_in=n_offered, n_accepted=n_acc,
         n_dequeued=jnp.sum(valid.astype(jnp.int32)) + n_late,
         n_late=n_late, n_late_excluded=n_lx, n_replayed=n_rep,
+        n_deduped=n_dedup, n_backfilled=n_bf, drift=drift, adm=adm,
         q_lat=q_lat, q_mask=dequeued, w_birth=w_birth)
 
 
@@ -330,16 +395,24 @@ def advance_metrics(m: StreamMetrics, ing: IngestResult,
                     n_escalated: jnp.ndarray, n_stored: jnp.ndarray,
                     n_dropped: jnp.ndarray,
                     overflow: jnp.ndarray) -> StreamMetrics:
-    """One step's worth of counter increments (shared fleet/single)."""
+    """One step's worth of counter increments (shared fleet/single).
+
+    Conservation per tick: ``n_in == n_accepted + rejected + deduped``
+    (``items_rejected`` covers contract violations and ring
+    backpressure; deduped re-deliveries are accounted apart — they are
+    not an error, they are the admission lane doing its job)."""
     one = jnp.int32(1)
     return StreamMetrics(
         steps=m.steps + one,
         items_offered=m.items_offered + ing.n_in,
         items_accepted=m.items_accepted + ing.n_accepted,
-        items_rejected=m.items_rejected + (ing.n_in - ing.n_accepted),
+        items_rejected=m.items_rejected
+        + (ing.n_in - ing.n_accepted - ing.n_deduped),
         items_dequeued=m.items_dequeued + ing.n_dequeued,
         items_late=m.items_late + ing.n_late,
         items_replayed=m.items_replayed + ing.n_replayed,
+        items_deduped=m.items_deduped + ing.n_deduped,
+        items_backfilled=m.items_backfilled + ing.n_backfilled,
         windows_emitted=m.windows_emitted
         + jnp.sum(ing.emit.astype(jnp.int32)),
         rules_fired=m.rules_fired
@@ -348,6 +421,7 @@ def advance_metrics(m: StreamMetrics, ing: IngestResult,
         windows_stored=m.windows_stored + n_stored,
         windows_dropped=m.windows_dropped + n_dropped,
         core_overflow=m.core_overflow + overflow,
+        drift_counts=m.drift_counts + ing.drift,
     )
 
 
@@ -401,7 +475,8 @@ class StreamExecutor:
                             jnp.float32),
             carry_valid=jnp.zeros((cfg.carry_len,), bool),
             max_ts=jnp.asarray(jnp.finfo(jnp.float32).min),
-            metrics=_zero_metrics(),
+            metrics=_zero_metrics(feature_dim),
+            adm=I.admission_init(cfg.admission),
         )
 
     @property
@@ -458,7 +533,8 @@ class StreamExecutor:
             self._jstep, state, jnp.asarray(items), jnp.asarray(ts),
             jnp.asarray(self._effective_budget(), jnp.int32),
             self._lat_hist, self._lineage,
-            jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32))
+            jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32),
+            jnp.asarray(I.MODE_LIVE, jnp.int32))
 
     @property
     def core_budget(self) -> int | None:
@@ -484,13 +560,13 @@ class StreamExecutor:
     def _step(self, state: StreamState, items: jnp.ndarray,
               ts: jnp.ndarray, budget: jnp.ndarray,
               lat_hist: jnp.ndarray, lineage: jnp.ndarray,
-              last_dt: jnp.ndarray, now: jnp.ndarray
+              last_dt: jnp.ndarray, now: jnp.ndarray, mode: jnp.ndarray
               ) -> tuple[StreamState, StepOutput, jnp.ndarray, jnp.ndarray]:
         # the Python body runs exactly once per jit trace, so this
         # counts (re)traces without reaching into jit internals
         self._traces += 1
         ing = ingest_and_window(self.cfg, self.engine, state, items, ts,
-                                now=now)
+                                mode=mode, now=now)
 
         # non-emitted windows (count < min_count) enter the pipeline
         # dead: no rules, no escalation, no core-capacity consumption
@@ -516,7 +592,7 @@ class StreamExecutor:
             })
         new_state = StreamState(
             rb=ing.rb, carry=ing.carry, carry_valid=ing.carry_valid,
-            max_ts=ing.max_ts, metrics=metrics,
+            max_ts=ing.max_ts, metrics=metrics, adm=ing.adm,
         )
         return new_state, StepOutput(ing.aggregates, ing.features,
                                      ing.window_count, ing.consequence,
@@ -525,11 +601,20 @@ class StreamExecutor:
 
     # -- public API ---------------------------------------------------------
     def step(self, state: StreamState, items: jnp.ndarray,
-             ts: jnp.ndarray) -> tuple[StreamState, StepOutput]:
+             ts: jnp.ndarray, mode: int | jnp.ndarray = I.MODE_LIVE
+             ) -> tuple[StreamState, StepOutput]:
         """One micro-batch tick: offer ``items [N, D]`` with event
         timestamps ``ts [N]``, consume one window batch.  N is the
         producer's batch size; keep it fixed across steps to stay on
         the single trace.
+
+        ``mode``: this tick's ingest mode (``stream.ingest.MODE_*``).
+        A traced int32 operand — switching a tick to replay or
+        backfill never recompiles.  Backfill ticks feed historical
+        batches through the same windows, lateness-exempt and
+        clock-neutral, accounted in ``items_backfilled``; with a
+        dedupe window configured, re-running a backfill is idempotent
+        (``items_deduped`` absorbs the second pass).
 
         Timestamps ride the ring as float32 (one row per sample), so
         event-time resolution degrades past ~2^24 time units; scale
@@ -561,7 +646,8 @@ class StreamExecutor:
                 jnp.asarray(self._effective_budget(), jnp.int32),
                 self._lat_hist, self._lineage,
                 jnp.asarray(feed, jnp.float32),
-                jnp.asarray(time.perf_counter() - self._t0, jnp.float32))
+                jnp.asarray(time.perf_counter() - self._t0, jnp.float32),
+                jnp.asarray(mode, jnp.int32))
         self.last_step_seconds = time.perf_counter() - t0
         self._skip_feed = self._compile_count() > compiles_before
         return state, out
@@ -571,28 +657,36 @@ class StreamExecutor:
             ) -> tuple[StreamState, list[StepOutput]]:
         """Drain a producer iterable of (items, ts) micro-batches.
 
+        Producer batches are ``(items, ts)`` or ``(items, ts, mode)``
+        triples — a replay/backfill batch rides the same loop with its
+        ingest mode attached (``stream.ingest.MODE_*``).
+
         With ``cfg.overlap_ingest`` the host stages batch N+1 (H2D
         transfer via ``runtime.overlap.IngestStager``, optionally
         int8-quantized) while the device still computes batch N — the
         classic ingest/compute overlap.  Staging changes delivery
         *timing* only: with ``ingest_int8=False`` the outputs are
         bitwise those of the direct loop (the staged path stays the
-        oracle); int8 staging is lossy and opt-in."""
+        oracle); int8 staging is lossy and opt-in.  The stager carries
+        each batch's mode through its double buffer, so a replay batch
+        is delivered *as* a replay batch — modes never silently decay
+        to live under overlap."""
         outs = []
         if not self.cfg.overlap_ingest:
-            for items, ts in producer:
-                state, out = self.step(state, items, ts)
+            for items, ts, *m in producer:
+                state, out = self.step(state, items, ts,
+                                       mode=m[0] if m else I.MODE_LIVE)
                 outs.append(out)
             return state, outs
         from repro.runtime.overlap import IngestStager
         stager = IngestStager(int8=self.cfg.ingest_int8)
-        for items, ts in producer:
-            staged = stager.stage(items, ts)
+        for items, ts, *m in producer:
+            staged = stager.stage(items, ts, m[0] if m else I.MODE_LIVE)
             if staged is not None:
-                state, out = self.step(state, *staged)
+                state, out = self.step(state, *staged[:2], mode=staged[2])
                 outs.append(out)
         staged = stager.flush()
         if staged is not None:
-            state, out = self.step(state, *staged)
+            state, out = self.step(state, *staged[:2], mode=staged[2])
             outs.append(out)
         return state, outs

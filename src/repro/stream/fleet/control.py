@@ -75,6 +75,9 @@ class ControlDecision(NamedTuple):
     slo_breached: tuple = ()      # names of SLOs in breach after this tick
     #                               (level, not transition — the policy
     #                               signal; transitions land in the log)
+    items_rejected: int = 0       # admission drops this tick (fleet sum)
+    items_deduped: int = 0        # re-deliveries dropped this tick
+    drift: np.ndarray | None = None  # [D] per-field violations this tick
 
 
 @dataclasses.dataclass
@@ -110,6 +113,9 @@ class FleetController:
     slos: tuple = ()
     _prev_escalated: np.ndarray = None
     _prev_healthy: np.ndarray = None
+    _prev_rejected: np.ndarray = None
+    _prev_deduped: np.ndarray = None
+    _prev_drift: np.ndarray = None   # [S, D], lazily sized on first tick
     _slo_eval: SloEvaluator | None = None
     _carry_stash: dict = None
     _resizes: int = 0
@@ -152,6 +158,10 @@ class FleetController:
             self._prev_escalated = np.zeros(e, np.int64)
         if self._prev_healthy is None:
             self._prev_healthy = np.ones(e, bool)
+        if self._prev_rejected is None:
+            self._prev_rejected = np.zeros(e, np.int64)
+        if self._prev_deduped is None:
+            self._prev_deduped = np.zeros(e, np.int64)
         if self._carry_stash is None:
             self._carry_stash = {}
         self.slos = tuple(self.slos)
@@ -380,12 +390,24 @@ class FleetController:
                                for k in keep], arr.dtype)
 
         # the executor folded the departed shard's cumulative counters
-        # into its backup row; the escalation baseline must fold the
+        # into its backup row; the differencing baselines must fold the
         # same way, or the first post-shrink tick reads the departed
-        # shard's whole history as one tick of phantom demand
+        # shard's whole history as one tick of phantom demand (or one
+        # tick of phantom rejects/drift)
         for src, dst in fold.items():
             self._prev_escalated[dst] += self._prev_escalated[src]
+            self._prev_rejected[dst] += self._prev_rejected[src]
+            self._prev_deduped[dst] += self._prev_deduped[src]
+            if self._prev_drift is not None:
+                self._prev_drift[dst] += self._prev_drift[src]
         self._prev_escalated = _remap(self._prev_escalated, 0)
+        self._prev_rejected = _remap(self._prev_rejected, 0)
+        self._prev_deduped = _remap(self._prev_deduped, 0)
+        if self._prev_drift is not None:
+            self._prev_drift = np.asarray(
+                [self._prev_drift[k] if k is not None
+                 else np.zeros_like(self._prev_drift[0])
+                 for k in keep], self._prev_drift.dtype)
         self._prev_healthy = _remap(self._prev_healthy, True)
         # per-region fog policies carry their hysteresis state through
         # an edge-width resize (region identity is preserved: region i
@@ -420,13 +442,51 @@ class FleetController:
         ex = self.executor
         e = ex.cfg.num_shards
         # one host pull for everything the loop needs
-        max_ts, esc_total, wm = jax.device_get(
-            (state.shard.max_ts, state.shard.metrics.windows_escalated,
-             state.watermark))
+        max_ts, esc_total, wm, rej_total, ded_total, drift_total = \
+            jax.device_get(
+                (state.shard.max_ts,
+                 state.shard.metrics.windows_escalated,
+                 state.watermark, state.shard.metrics.items_rejected,
+                 state.shard.metrics.items_deduped,
+                 state.shard.metrics.drift_counts))
         max_ts = np.asarray(max_ts, np.float64)
         esc_total = np.asarray(esc_total, np.int64)
         escalated = esc_total - self._prev_escalated
         self._prev_escalated = esc_total
+
+        # -- admission-lane telemetry: rejects, dedupes, drift ---------
+        # monotone counters differenced against the previous tick; a
+        # moving reject counter means the lane dropped offered rows
+        # (contract violation or ring backpressure) and a moving drift
+        # counter means some field is violating its contract — both
+        # land as typed events so a post-hoc reconstruction can place
+        # data-quality incidents next to churn/budget decisions
+        rej_total = np.asarray(rej_total, np.int64)
+        ded_total = np.asarray(ded_total, np.int64)
+        drift_total = np.asarray(drift_total, np.int64)
+        if self._prev_drift is None:
+            self._prev_drift = np.zeros_like(drift_total)
+        rejected = rej_total - self._prev_rejected
+        deduped = ded_total - self._prev_deduped
+        drift = drift_total - self._prev_drift
+        self._prev_rejected = rej_total
+        self._prev_deduped = ded_total
+        self._prev_drift = drift_total
+        if int(rejected.sum()) > 0:
+            self._emit(
+                "ingest_reject",
+                cause="admission lane dropped offered rows (contract "
+                      "violation or ring backpressure)",
+                rejected=int(rejected.sum()),
+                deduped=int(deduped.sum()),
+                per_shard=[int(x) for x in rejected])
+        drift_fleet = drift.sum(axis=0) if drift.ndim > 1 else drift
+        if int(drift_fleet.sum()) > 0:
+            self._emit(
+                "drift_detected",
+                cause="per-field contract violations advanced",
+                total=int(drift_fleet.sum()),
+                per_field=[int(x) for x in np.atleast_1d(drift_fleet)])
 
         # -- straggler detection: wall-clock + event-time lag ----------
         if step_times is None:
@@ -546,7 +606,10 @@ class FleetController:
             healthy=healthy, stragglers=flagged, escalated=escalated,
             watermark=float(np.asarray(wm).reshape(-1)[0]),
             region_budgets=region_budgets, fog_resized=fog_resized,
-            slo_breached=slo_breached)
+            slo_breached=slo_breached,
+            items_rejected=int(rejected.sum()),
+            items_deduped=int(deduped.sum()),
+            drift=np.atleast_1d(drift_fleet))
 
     @property
     def max_trace_count(self) -> int:

@@ -55,10 +55,16 @@ Fleet **churn** (devices leave and join) is handled at two granularities:
   fold into a surviving row), and costs exactly one re-trace
   (``trace_count <= 1 + retraces + remeshes``).
 
-Backup replay rides the ``replay`` per-shard operand: a tick whose
-batch is another (departed) shard's buffered micro-batches is exempt
-from the late test, counted in ``items_replayed``, and never advances
-the host shard's own event-time clock.
+Backup replay rides the ``mode`` per-shard operand (``stream.ingest``'s
+``MODE_LIVE | MODE_REPLAY | MODE_BACKFILL``): a tick whose batch is
+another (departed) shard's buffered micro-batches — or a historical
+backfill — is exempt from the late test, counted in ``items_replayed``
+/ ``items_backfilled``, and never advances the host shard's own
+event-time clock.  Every shard's ingest runs through the same
+admission lane as the single-device executor (``stream.ingest``):
+per-shard dedupe windows, contract gating, and drift counters are
+rows of the sharded state, so a redelivered backup batch dedupes on
+the backup exactly as it would have on the departed shard.
 """
 from __future__ import annotations
 
@@ -80,6 +86,7 @@ from repro.obs import latency as OL
 from repro.obs.trace import NULL_TRACER
 from repro.core.pipeline import DataDrivenPipeline
 from repro.data import ringbuffer as rbuf
+from repro.stream import ingest as SI
 from repro.stream.executor import (META_COLS, StepOutput, StreamConfig,
                                    StreamMetrics, StreamState, _zero_metrics,
                                    advance_metrics, ingest_and_window)
@@ -230,7 +237,11 @@ class FleetMetrics(NamedTuple):
             return v.tolist() if getattr(v, "ndim", 0) else int(v)
 
         def _fleet(v):
-            return int(np.asarray(v).reshape(-1)[0])
+            # fleet leaves are replicated over the leading [S] axis;
+            # scalar counters collapse to one int, array counters (the
+            # [S, D] drift leaf) to their first row
+            v = np.asarray(v)
+            return v[0].tolist() if v.ndim > 1 else int(v.reshape(-1)[0])
 
         return {
             "shard": {k: _shard(v) for k, v in
@@ -379,14 +390,14 @@ class FleetExecutor:
                                       spec, P(), rspec, spec, P()),
                             out_specs=(spec, spec, spec))
 
-        def _traced(state, items, ts, offered, replay, healthy, active,
+        def _traced(state, items, ts, offered, mode, healthy, active,
                     budget, region_budget, lat_hist, lineage, last_dt,
                     now):
             # outer jit body runs once per trace (shard_map may re-trace
             # its inner fn during lowering; don't count those)
             self._traces += 1
             new_state, out, lineage = sharded(
-                state, items, ts, offered, replay, healthy, active,
+                state, items, ts, offered, mode, healthy, active,
                 budget, region_budget, lineage, now)
             # step-latency histogram: replicated, updated outside the
             # shard_map (one tick = one host-measured wall time)
@@ -561,7 +572,7 @@ class FleetExecutor:
         offered = jnp.ones(jnp.asarray(ts).shape, bool)
         return OC.analyze(
             self._jstep, state, jnp.asarray(items), jnp.asarray(ts),
-            offered, jnp.zeros(self.cfg.num_shards, bool),
+            offered, jnp.zeros(self.cfg.num_shards, jnp.int32),
             jnp.asarray(self._healthy), jnp.asarray(self._active),
             jnp.asarray(self._budget, jnp.int32),
             jnp.asarray(self._region_budget, jnp.int32),
@@ -581,7 +592,8 @@ class FleetExecutor:
                             jnp.float32),
             carry_valid=jnp.zeros((cfg.carry_len,), bool),
             max_ts=jnp.asarray(jnp.finfo(jnp.float32).min),
-            metrics=_zero_metrics(),
+            metrics=_zero_metrics(feature_dim),
+            adm=SI.admission_init(cfg.admission),
         )
         # distinct buffers per counter: the step donates its state, and
         # XLA rejects donating one aliased buffer through several args
@@ -590,7 +602,9 @@ class FleetExecutor:
 
         return FleetState(
             shard=jax.tree.map(tile, shard),
-            fleet=StreamMetrics(*(zero() for _ in StreamMetrics._fields)),
+            fleet=StreamMetrics(
+                *(zero() for _ in StreamMetrics._fields[:-1]),
+                drift_counts=jnp.zeros((E, feature_dim), jnp.int32)),
             escalations_sent=zero(), fog_shed=zero(), core_received=zero(),
             core_processed=zero(), fleet_core_overflow=zero(),
             late_excluded=zero(),
@@ -617,7 +631,7 @@ class FleetExecutor:
     # -- the single-trace fleet tick ---------------------------------------
     def _fleet_step(self, state: FleetState, items: jnp.ndarray,
                     ts: jnp.ndarray, offered: jnp.ndarray,
-                    replay: jnp.ndarray, healthy: jnp.ndarray,
+                    mode: jnp.ndarray, healthy: jnp.ndarray,
                     active: jnp.ndarray, budget: jnp.ndarray,
                     region_budget: jnp.ndarray, lineage: jnp.ndarray,
                     now: jnp.ndarray
@@ -626,7 +640,8 @@ class FleetExecutor:
         s = jax.tree.map(lambda x: x[0], state)        # this shard's block
         h = healthy[0]                                 # this shard's flag
         a = active[0]                                  # membership flag
-        r = replay[0]                                  # backup-replay tick
+        m = mode[0]                                    # ingest mode (live /
+        #                                                replay / backfill)
         rb = region_budget[0]                          # this region's fog
         #                                                budget
         lin = lineage[0]                               # [n_stages, buckets]
@@ -660,7 +675,7 @@ class FleetExecutor:
         ing = ingest_and_window(cfg.stream, self.engine, s.shard,
                                 items[0], ts[0], watermark_ts=eff_wm,
                                 offer_mask=offered[0], excluded_ref=wm,
-                                replay=r, now=now)
+                                mode=m, now=now)
 
         # edge pipeline stages + rule gating, purely local; a departed
         # shard never escalates (membership masks the core exchange)
@@ -717,7 +732,8 @@ class FleetExecutor:
                 jnp.sum(result.dropped.astype(jnp.int32)), overflow)
         new_shard = StreamState(rb=ing.rb, carry=ing.carry,
                                 carry_valid=ing.carry_valid,
-                                max_ts=ing.max_ts, metrics=metrics)
+                                max_ts=ing.max_ts, metrics=metrics,
+                                adm=ing.adm)
         # fleet totals sum over *members* only: a departed shard's rows
         # drop out of the psum while it is away and return on rejoin
         contrib = jax.tree.map(lambda v: jnp.where(a, v, jnp.zeros_like(v)),
@@ -744,7 +760,8 @@ class FleetExecutor:
     # -- public API ---------------------------------------------------------
     def step(self, state: FleetState, items: jnp.ndarray,
              ts: jnp.ndarray, offered: jnp.ndarray | None = None,
-             replay: jnp.ndarray | None = None
+             replay: jnp.ndarray | None = None,
+             mode: jnp.ndarray | None = None
              ) -> tuple[FleetState, StepOutput]:
         """One fleet tick: offer ``items [E, N, D]`` with event
         timestamps ``ts [E, N]`` (one producer batch per shard),
@@ -754,14 +771,17 @@ class FleetExecutor:
         ``offered``: optional [E, N] bool — which producer slots hold
         real items (a stalled shard's uplink offers nothing while its
         batches buffer upstream; shapes stay fixed, so the single
-        trace survives fleet degradation).  ``replay``: optional [E]
-        bool — which shards' batches are backup-replay traffic (a
-        departed peer's buffered micro-batches re-executed here:
-        lateness-exempt, counted in ``items_replayed``, never touching
-        the host shard's own event-time clock).  The current health
-        mask (``set_health``), membership mask (``set_active``), and
-        dynamic core budget (``set_core_budget``) ride along as traced
-        operands.
+        trace survives fleet degradation).  ``mode``: optional [E]
+        int32 of ``stream.ingest.MODE_*`` — which shards' batches are
+        reprocessing traffic this tick (``MODE_REPLAY`` for a departed
+        peer's buffered micro-batches re-executed here, ``MODE_BACKFILL``
+        for historical re-ingestion: both lateness-exempt, counted in
+        ``items_replayed`` / ``items_backfilled``, never touching the
+        host shard's own event-time clock).  ``replay``: legacy [E]
+        bool shorthand for ``MODE_REPLAY`` (mutually exclusive with
+        ``mode``).  The current health mask (``set_health``),
+        membership mask (``set_active``), and dynamic core budget
+        (``set_core_budget``) ride along as traced operands.
 
         ``last_step_seconds`` records the host wall time of the call
         *including device execution* (the output is blocked on before
@@ -773,26 +793,32 @@ class FleetExecutor:
         overlap."""
         if offered is None:
             offered = jnp.ones(items.shape[:2], bool)
-        if replay is None:
-            replay = np.zeros(self.cfg.num_shards, bool)
-        elif np.asarray(replay).any():
-            # batch-granular replay precondition, enforced (silent
+        if replay is not None and mode is not None:
+            raise ValueError("pass either replay (bool shorthand) or "
+                             "mode (MODE_* codes), not both")
+        if replay is not None:
+            mode = np.where(np.asarray(replay, bool),
+                            SI.MODE_REPLAY, SI.MODE_LIVE).astype(np.int32)
+        if mode is None:
+            mode = np.zeros(self.cfg.num_shards, np.int32)
+        elif np.asarray(mode).any():
+            # batch-granular reprocessing precondition, enforced (silent
             # window corruption otherwise, see README "Shard churn"):
             # a per-tick-drained ring (N <= micro_batch; N is fixed by
-            # the trace, so replay rows can never linger in the ring
-            # past their lateness-exempt tick).  Sliding-carry configs
-            # are legal too, PROVIDED the control plane performed the
-            # mid-ring carry handoff
+            # the trace, so replayed/backfilled rows can never linger in
+            # the ring past their lateness-exempt tick).  Sliding-carry
+            # configs are legal too, PROVIDED the control plane
+            # performed the mid-ring carry handoff
             # (``FleetController.begin_replay_carry`` /
             # ``end_replay_carry``): the departed stream's window carry
             # rides on the backup's slot for the replay ticks, so the
             # backup's own samples never smear into replayed windows.
             if items.shape[1] > self.cfg.stream.micro_batch:
                 raise ValueError(
-                    f"replay needs a per-tick-drained ring: offer size "
-                    f"{items.shape[1]} > micro_batch "
-                    f"{self.cfg.stream.micro_batch} leaves replayed rows "
-                    "queued past their lateness-exempt tick")
+                    f"replay/backfill needs a per-tick-drained ring: "
+                    f"offer size {items.shape[1]} > micro_batch "
+                    f"{self.cfg.stream.micro_batch} leaves reprocessed "
+                    "rows queued past their lateness-exempt tick")
         self._step_num += 1
         # warmup exclusion: the previous tick's wall time is the
         # histogram feed — unless that tick compiled, in which case it
@@ -808,7 +834,7 @@ class FleetExecutor:
             with self.tracer.span("fleet.dispatch", step=self._step_num):
                 out, self._lat_hist, self._lineage = self._jstep(
                     state, items, ts, jnp.asarray(offered, bool),
-                    jnp.asarray(replay, bool),
+                    jnp.asarray(mode, jnp.int32),
                     jnp.asarray(self._healthy),
                     jnp.asarray(self._active),
                     jnp.asarray(self._budget, jnp.int32),

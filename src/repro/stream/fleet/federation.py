@@ -459,8 +459,19 @@ def federate_escalations_tiered(
 
 
 def allreduce_metrics(metrics, axis_name):
-    """All-reduce a NamedTuple of scalar counters over the fleet axis
-    (one stacked psum, not one collective per counter)."""
-    vec = jnp.stack(list(metrics))
-    tot = jax.lax.psum(vec, axis_name)
-    return type(metrics)(*(tot[i] for i in range(len(metrics))))
+    """All-reduce a NamedTuple of counters over the fleet axis.  Scalar
+    leaves ride ONE stacked psum (not one collective per counter);
+    array-valued leaves (the [D] per-field ``drift_counts``) can't join
+    the stack — shapes differ — so each gets its own psum."""
+    leaves = list(metrics)
+    scalar = [i for i, v in enumerate(leaves) if jnp.ndim(v) == 0]
+    out = list(leaves)
+    if scalar:
+        tot = jax.lax.psum(jnp.stack([leaves[i] for i in scalar]),
+                           axis_name)
+        for j, i in enumerate(scalar):
+            out[i] = tot[j]
+    for i in range(len(leaves)):
+        if i not in scalar:
+            out[i] = jax.lax.psum(leaves[i], axis_name)
+    return type(metrics)(*out)

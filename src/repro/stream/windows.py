@@ -241,7 +241,8 @@ def session_window(x: jnp.ndarray, valid: jnp.ndarray, ts: jnp.ndarray,
 
 @jax.jit
 def apply_watermark(ts: jnp.ndarray, valid: jnp.ndarray,
-                    max_ts: jnp.ndarray, lateness: jnp.ndarray | float
+                    max_ts: jnp.ndarray, lateness: jnp.ndarray | float,
+                    exempt: jnp.ndarray | None = None
                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Event-time watermark with bounded lateness (stream-SQL semantics).
 
@@ -254,12 +255,19 @@ def apply_watermark(ts: jnp.ndarray, valid: jnp.ndarray,
     nothing regardless of block time-span; only data reordered *across*
     blocks by more than ``lateness`` is dropped.
 
+    ``exempt``: optional [T] bool — rows exempt from the late test AND
+    from advancing the max (the ingest lane's replay/backfill rows:
+    old by construction, the whole point is to keep them, and a
+    foreign/historical stream must not drive the local clock — see
+    ``stream.ingest`` for the mode semantics built on this hook).
+
     Returns (valid', n_late, new_max_ts) with the max advanced by this
-    block's valid samples.
+    block's valid non-exempt samples.
     """
     valid = valid.astype(bool)
+    live = valid if exempt is None else valid & ~exempt
     info = jnp.finfo(ts.dtype) if jnp.issubdtype(ts.dtype, jnp.inexact) \
         else jnp.iinfo(ts.dtype)           # integer tick timestamps work too
-    late = valid & (ts < max_ts - lateness)
-    new_max = jnp.maximum(max_ts, jnp.max(jnp.where(valid, ts, info.min)))
+    late = live & (ts < max_ts - lateness)
+    new_max = jnp.maximum(max_ts, jnp.max(jnp.where(live, ts, info.min)))
     return valid & ~late, jnp.sum(late.astype(jnp.int32)), new_max

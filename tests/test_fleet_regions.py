@@ -140,7 +140,11 @@ _SCRIPT = textwrap.dedent("""
             assert md_h["region_watermark"][r*EPER:(r+1)*EPER] \\
                 == [sub_md[r]["watermark"]] * EPER, r
         for k in sub_md[0]["fleet"]:
-            assert md_h["fleet"][k] == sum(s["fleet"][k] for s in sub_md)
+            vals = [s["fleet"][k] for s in sub_md]
+            # drift_counts is a per-field list: sum elementwise
+            want = (np.sum(vals, axis=0).tolist()
+                    if isinstance(vals[0], list) else sum(vals))
+            assert md_h["fleet"][k] == want, k
         assert md_h["watermark"] == min(
             s["watermark"] for s in sub_md)
         # device watermark agrees with the layered numpy reference

@@ -39,13 +39,17 @@ def test_stream_metrics_golden_keys():
     assert StreamMetrics._fields == (
         "steps", "items_offered", "items_accepted", "items_rejected",
         "items_dequeued", "items_late", "items_replayed",
+        "items_deduped", "items_backfilled",
         "windows_emitted", "rules_fired", "windows_escalated",
-        "windows_stored", "windows_dropped", "core_overflow")
+        "windows_stored", "windows_dropped", "core_overflow",
+        "drift_counts")
     m = StreamMetrics(*(jnp.zeros((), jnp.int32)
-                        for _ in StreamMetrics._fields))
+                        for _ in StreamMetrics._fields[:-1]),
+                      drift_counts=jnp.zeros((3,), jnp.int32))
     d = m.as_dict()
     assert tuple(d) == StreamMetrics._fields
-    assert all(v == 0 for v in d.values())
+    assert all(v == 0 for k, v in d.items() if k != "drift_counts")
+    assert d["drift_counts"] == [0, 0, 0]      # per-field -> list
 
 
 def test_fleet_metrics_golden_keys():
@@ -55,7 +59,8 @@ def test_fleet_metrics_golden_keys():
         "core_received", "core_processed", "fleet_core_overflow",
         "late_excluded", "watermark", "region_watermark")
     zeros = StreamMetrics(*(jnp.zeros((2,), jnp.int32)
-                            for _ in StreamMetrics._fields))
+                            for _ in StreamMetrics._fields[:-1]),
+                          drift_counts=jnp.zeros((2, 3), jnp.int32))
     m = FleetMetrics(shard=zeros, fleet=zeros,
                      escalations_sent=jnp.zeros((2,), jnp.int32),
                      fog_shed=jnp.zeros((2,), jnp.int32),
@@ -71,6 +76,8 @@ def test_fleet_metrics_golden_keys():
     assert tuple(d["fleet"]) == StreamMetrics._fields
     assert d["shard"]["steps"] == [0, 0]       # per-shard -> list
     assert d["fleet"]["steps"] == 0            # replicated -> scalar
+    assert d["shard"]["drift_counts"] == [[0, 0, 0], [0, 0, 0]]
+    assert d["fleet"]["drift_counts"] == [0, 0, 0]  # replicated -> row
 
 
 def test_event_schema_golden():
@@ -78,7 +85,8 @@ def test_event_schema_golden():
         "budget_resize", "health_change", "leave", "join",
         "backup_assign", "remesh", "stall_buffer", "replay_queue",
         "replay_delivery", "backlog_drain", "slot_drain", "requeue",
-        "fog_budget_resize", "slo_breach", "slo_recover"})
+        "fog_budget_resize", "slo_breach", "slo_recover",
+        "ingest_reject", "drift_detected"})
     assert ENVELOPE_FIELDS == ("seq", "wall_time", "tick", "kind",
                                "shard", "cause")
 

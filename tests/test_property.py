@@ -360,3 +360,96 @@ def test_lineage_merge_pooling_property(seed, shards):
         pooled = OL.histogram_merge(pooled, s)
     np.testing.assert_array_equal(pooled, banks.sum(axis=0))
     assert OL.lineage_percentiles(banks) == OL.lineage_percentiles(pooled)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(1, 48),
+       k=st.integers(1, 96))
+def test_dedupe_twice_equals_once_property(seed, n, k):
+    """Idempotence: once the window is wide enough to remember a batch
+    (k >= n), offering it a second time yields zero fresh rows, and
+    recording the (empty) second acceptance leaves the seen ring and
+    rotation untouched — dedupe(dedupe(x)) == dedupe(x)."""
+    from repro.kernels.dedupe_window import (EMPTY_HASH, dedupe_window_ref,
+                                             row_hash_ref, seen_record_ref)
+
+    rng = np.random.default_rng(seed)
+    k = max(k, n)
+    rows = rng.standard_normal((n, 4)).astype(np.float32)
+    h = row_hash_ref(rows)
+    seen = np.full((k,), np.uint32(EMPTY_HASH), np.uint32)
+    offered = np.ones(n, bool)
+    fresh1, _ = dedupe_window_ref(h, offered, seen)
+    seen1, pos1 = seen_record_ref(seen, 0, h, fresh1)
+    fresh2, dup2 = dedupe_window_ref(h, offered, seen1)
+    assert not fresh2.any()
+    assert int(dup2.sum()) == len(np.unique(h))
+    seen2, pos2 = seen_record_ref(seen1, pos1, h, fresh2)
+    np.testing.assert_array_equal(seen2, seen1)
+    assert pos2 == pos1
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(2, 48),
+       k=st.integers(1, 128))
+def test_dedupe_permutation_invariant_property(seed, n, k):
+    """Against a fixed seen window, WHICH event ids come out fresh does
+    not depend on the order they arrive in: the fresh-hash multiset is
+    permutation-invariant (intra-batch dups keep exactly one copy)."""
+    from repro.kernels.dedupe_window import (EMPTY_HASH, dedupe_window_ref,
+                                             row_hash_ref)
+
+    rng = np.random.default_rng(seed)
+    rows = rng.standard_normal((n, 4)).astype(np.float32)
+    rows[rng.integers(n)] = rows[rng.integers(n)]   # maybe an intra dup
+    h = row_hash_ref(rows)
+    seen = np.full((k,), np.uint32(EMPTY_HASH), np.uint32)
+    m = rng.integers(0, min(k, n) + 1)
+    seen[:m] = h[rng.permutation(n)[:m]]            # some already seen
+    perm = rng.permutation(n)
+    fresh_a, _ = dedupe_window_ref(h, np.ones(n, bool), seen)
+    fresh_b, _ = dedupe_window_ref(h[perm], np.ones(n, bool), seen)
+    assert sorted(h[fresh_a].tolist()) == sorted(h[perm][fresh_b].tolist())
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1),
+       nl=st.integers(1, 24),
+       nb=st.integers(1, 24))
+def test_dedupe_backfill_commute_property(seed, nl, nb):
+    """Order independence of reprocessing: ingesting a live batch then
+    a backfill batch admits the same event-id set (and the same total
+    dedupe count) as backfill-then-live, whenever the window covers
+    both — dedupe and backfill commute."""
+    from repro.kernels.dedupe_window import (EMPTY_HASH, dedupe_window_ref,
+                                             row_hash_ref, seen_record_ref)
+
+    rng = np.random.default_rng(seed)
+    k = 2 * (nl + nb)
+    live = rng.standard_normal((nl, 3)).astype(np.float32)
+    back = rng.standard_normal((nb, 3)).astype(np.float32)
+    # overlap: the backfill re-delivers some live rows (the usual
+    # reason a backfill needs dedupe at all)
+    n_ov = rng.integers(0, min(nl, nb) + 1)
+    back[:n_ov] = live[:n_ov]
+
+    def run(batches):
+        seen = np.full((k,), np.uint32(EMPTY_HASH), np.uint32)
+        pos, admitted, deduped = 0, [], 0
+        for rows in batches:
+            h = row_hash_ref(rows)
+            fresh, dup = dedupe_window_ref(h, np.ones(len(rows), bool),
+                                           seen)
+            seen, pos = seen_record_ref(seen, pos, h, fresh)
+            admitted.extend(h[fresh].tolist())
+            deduped += int(dup.sum())
+        return set(admitted), deduped
+
+    adm_lb, ded_lb = run([live, back])
+    adm_bl, ded_bl = run([back, live])
+    assert adm_lb == adm_bl
+    assert ded_lb == ded_bl
+    assert adm_lb == set(row_hash_ref(np.concatenate([live, back]))
+                         .tolist())

@@ -626,7 +626,9 @@ def test_metrics_as_dict_snapshot(rng):
     state, _, _ = _feed(ex, state, rng, 3)
     d = state.metrics.as_dict()
     assert set(d) == set(ex.init_state(3).metrics._fields)
-    assert all(isinstance(v, int) for v in d.values())
+    assert all(isinstance(v, int) for k, v in d.items()
+               if k != "drift_counts")
+    assert d["drift_counts"] == [0, 0, 0]    # [D] per-field -> list
     assert d["steps"] == 3 and d["items_offered"] == 96
 
 
